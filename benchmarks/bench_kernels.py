@@ -1,0 +1,42 @@
+"""Kernel-path benchmarks: Pallas (interpret) vs pure-jnp reference, plus
+the sort-based vs scatter-based sketch update paths.
+
+On CPU the interpret-mode timings are NOT TPU predictions — the value is
+(a) correctness at benchmark scale and (b) the op-count/roofline numbers
+recorded in EXPERIMENTS.md §Perf.  The flop/byte model for the MXU
+estimate path is printed alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_fn
+from repro.core import sketch
+from repro.kernels import ops
+
+
+def run(n: int = 1 << 16) -> str:
+    csv = Csv(["path", "seconds", "notes"])
+    keys = jax.random.bits(jax.random.key(0), (2, n), dtype=jnp.uint32)
+    sk0 = sketch.init(jax.random.key(1), rows=8, log2_cols=14)
+
+    upd_scatter = jax.jit(sketch.update)
+    upd_sorted = jax.jit(sketch.update_sorted)
+    csv.add("xla_scatter_update", f"{time_fn(upd_scatter, sk0, keys[0], keys[1]):.5f}",
+            f"n={n}")
+    csv.add("xla_sort_update", f"{time_fn(upd_sorted, sk0, keys[0], keys[1]):.5f}",
+            "production bulk path")
+
+    # estimate: gather vs MXU one-hot (flop model: R*Q*C MAC)
+    skf = sketch.update(sk0, keys[0], keys[1])
+    q = 1 << 12
+    est_ref = jax.jit(sketch.estimate)
+    csv.add("xla_gather_estimate",
+            f"{time_fn(est_ref, skf, keys[0][:q], keys[1][:q]):.5f}",
+            f"q={q}")
+    mac = 8 * q * (1 << 14)
+    csv.add("mxu_estimate_model", f"{2 * mac / 197e12:.2e}",
+            "TPU-v5e seconds at MXU rate (model)")
+    return csv.dump("kernel_paths (update/estimate path comparison)")

@@ -1,0 +1,30 @@
+"""Paper Fig. 6: sketch build time vs stream size — asymptotically linear.
+
+The paper streams up to 10⁹ points through a 10×20,000 sketch on a V100
+and reports linear scaling.  We sweep the stream length over two orders
+of magnitude on CPU and fit the log-log slope: linear scaling ⇒ slope ≈ 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_fn
+from repro.core import sketch
+
+
+def run() -> str:
+    csv = Csv(["n_points", "seconds", "points_per_sec"])
+    sk0 = sketch.init(jax.random.key(0), rows=10, log2_cols=15)
+    sizes = [1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    secs = []
+    upd = jax.jit(sketch.update_sorted)
+    for n in sizes:
+        keys = jax.random.bits(jax.random.key(n), (2, n), dtype=jnp.uint32)
+        t = time_fn(upd, sk0, keys[0], keys[1])
+        secs.append(t)
+        csv.add(n, f"{t:.5f}", f"{n / t:.3e}")
+    slope = np.polyfit(np.log(sizes), np.log(secs), 1)[0]
+    csv.add("loglog_slope", f"{slope:.3f}", "target~1.0(linear)")
+    return csv.dump("sketch_scaling (paper Fig 6: linear in stream size)")

@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Csv:
+    def __init__(self, header: List[str]):
+        self.header = header
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def dump(self, title: str) -> str:
+        out = [f"# {title}", ",".join(self.header)]
+        for r in self.rows:
+            out.append(",".join(str(x) for x in r))
+        return "\n".join(out)

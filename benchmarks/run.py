@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits CSV blocks (name, value, paper reference) for:
+  * sketch_scaling       — paper Fig. 6 (linear time in stream size)
+  * error_vs_rank        — paper §III-2 (CS estimate error by HH rank)
+  * hh_vs_sampling       — paper §II-2 (HH beats random subsampling)
+  * hh_coverage          — paper §IV (cumulative HH mass)
+  * collision_model      — paper §III-2 (grid-resolution guidance)
+  * pipeline_quality     — paper §IV-1 (contingency-table analog)
+  * kernel_paths         — update/estimate implementation comparison
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_sketch_scaling, bench_error_vs_rank,
+                            bench_hh_vs_sampling, bench_coverage,
+                            bench_collision_model, bench_pipeline_quality,
+                            bench_kernels)
+    n_scale = 200_000 if args.fast else 2_000_000
+    n_mid = 100_000 if args.fast else 1_000_000
+    n_small = 60_000 if args.fast else 300_000
+    jobs = [
+        ("sketch_scaling", lambda: bench_sketch_scaling.run()),
+        ("error_vs_rank", lambda: bench_error_vs_rank.run(n_scale)),
+        ("hh_vs_sampling", lambda: bench_hh_vs_sampling.run(n_mid)),
+        ("hh_coverage", lambda: bench_coverage.run(n_scale)),
+        ("collision_model", lambda: bench_collision_model.run()),
+        ("pipeline_quality", lambda: bench_pipeline_quality.run(n_small)),
+        ("kernel_paths", lambda: bench_kernels.run()),
+    ]
+    for name, fn in jobs:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            print(fn())
+            print(f"# [{name} done in {time.time() - t0:.1f}s]\n",
+                  flush=True)
+        except Exception as e:                               # noqa: BLE001
+            print(f"# [{name} FAILED: {type(e).__name__}: {e}]\n",
+                  file=sys.stderr, flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""The paper's own experiment configurations (§IV).
+
+* cancer: 52M pixels → 26M after noise cut, 8-dim PCA colors, 25 bins/axis,
+  16×2·10⁵ sketch, top 20,000 heavy hitters → UMAP 2-D.
+* sdss:   30M stars, 10 color-difference features (paper uses subsets of
+  the (u-g, …, i-z) differences; the published run binned 22/axis and took
+  2,609–20,000 HHs) → UMAP 4-D.
+
+Column counts are rounded to powers of two (2¹⁸ = 262144 ≈ 2·10⁵) so the
+bucket hash is a shift — see core/sketch.init.
+"""
+from repro.core.pipeline import SnsConfig
+
+CANCER = SnsConfig(
+    bins=25, rows=16, log2_cols=18, top_k=20_000,
+    replica_scheme="count", max_replicas=8, jitter_frac=0.25,
+    embedder="umap", embed_dims=2)
+
+SDSS = SnsConfig(
+    bins=22, rows=16, log2_cols=18, top_k=2_609,
+    replica_scheme="count", max_replicas=8, jitter_frac=0.25,
+    embedder="umap", embed_dims=4)
+
+# Error-vs-rank evaluation (paper §III-2): 22 bins, top-20k query set
+CANCER_ERROR_EVAL = SnsConfig(
+    bins=22, rows=16, log2_cols=18, top_k=20_000,
+    embedder="umap", embed_dims=2)

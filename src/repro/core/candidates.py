@@ -1,0 +1,79 @@
+"""Exact local top-k candidate extraction over one data shard.
+
+The Count Sketch table estimates *frequencies* but does not store key
+*identities*.  The classic stream solution keeps a heap of candidates next
+to the sketch; a heap is hostile to SPMD TPU execution, so we use the
+averaging argument instead: any globally (ε,ℓ₂)-heavy key is locally heavy
+on at least one shard.  Each shard therefore extracts its own exact top-L
+keys (sort → run-length-encode → top-k), and the global stage
+(:mod:`repro.core.heavy_hitters`) all-gathers the candidate keys and
+re-estimates them on the merged sketch.
+
+Everything is static-shape: L is fixed, shards with fewer than L distinct
+keys pad with an invalid key + mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Candidates(NamedTuple):
+    """Top-L locally-frequent keys of one shard (padded, mask-carrying)."""
+    key_hi: jnp.ndarray    # (L,) uint32
+    key_lo: jnp.ndarray    # (L,) uint32
+    count: jnp.ndarray     # (L,) float32 — exact local count
+    mask: jnp.ndarray      # (L,) bool — False for padding
+
+
+def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
+               values: Optional[jnp.ndarray] = None,
+               mask: Optional[jnp.ndarray] = None) -> Candidates:
+    """Exact top-k distinct keys of this shard by total count/value.
+
+    sort (TPU-native bitonic) → run-length segments → segment_sum →
+    top_k.  O(n log n) work, fully vectorized, static shapes.
+    """
+    n = key_hi.shape[0]
+    v = jnp.ones((n,), jnp.float32) if values is None \
+        else values.astype(jnp.float32)
+    if mask is not None:
+        v = v * mask.astype(jnp.float32)
+    order = jnp.lexsort((key_lo, key_hi))
+    shi, slo, sv = key_hi[order], key_lo[order], v[order]
+    new_run = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (shi[1:] != shi[:-1]) | (slo[1:] != slo[:-1])])
+    run_id = jnp.cumsum(new_run) - 1
+    run_sum = jax.ops.segment_sum(sv, run_id, num_segments=n)   # (n,) padded
+    first_idx = jnp.where(new_run, size=n, fill_value=n - 1)[0]
+    rhi, rlo = shi[first_idx], slo[first_idx]
+    num_runs = run_id[-1] + 1
+    live = jnp.arange(n) < num_runs
+    # masked-out inputs can form runs with sum 0 — drop them too
+    live &= run_sum > 0
+    score = jnp.where(live, run_sum, -jnp.inf)
+    top_score, top_idx = jax.lax.top_k(score, k)
+    cmask = jnp.isfinite(top_score)
+    return Candidates(
+        key_hi=jnp.where(cmask, rhi[top_idx], jnp.uint32(0xFFFFFFFF)),
+        key_lo=jnp.where(cmask, rlo[top_idx], jnp.uint32(0xFFFFFFFF)),
+        count=jnp.where(cmask, top_score, 0.0),
+        mask=cmask)
+
+
+def concat(*cands: Candidates) -> Candidates:
+    """Concatenate candidate sets (e.g. after all_gather over shards)."""
+    return Candidates(
+        key_hi=jnp.concatenate([c.key_hi for c in cands]),
+        key_lo=jnp.concatenate([c.key_lo for c in cands]),
+        count=jnp.concatenate([c.count for c in cands]),
+        mask=jnp.concatenate([c.mask for c in cands]))
+
+
+def all_gather(cands: Candidates, axis_name) -> Candidates:
+    """Gather every shard's candidates along a mesh axis -> (shards*L,) sets."""
+    gathered = jax.lax.all_gather(cands, axis_name, tiled=True)
+    return gathered

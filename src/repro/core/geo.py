@@ -1,0 +1,153 @@
+"""Geo-distributed sketching: the paper's topology on a JAX device mesh.
+
+Paper §V: data at different geographic locations is sketched *in place*;
+only the fixed-size sketches move; aggregation is a tree — within one data
+center first, across data centers second.  On a TPU mesh that hierarchy is
+exactly (ICI within a pod) × (DCN across pods):
+
+    mesh axes ("pod", "data"):  "data" = workers inside one data center,
+                                "pod"  = data centers.
+
+``sketch_shard`` runs per device inside ``shard_map``: quantize → pack →
+local Count Sketch + local exact top-L candidates.  ``psum`` over "data"
+then "pod" merges the sketches (linearity!), ``all_gather`` shares the
+candidate keys, and every device recovers the same global heavy hitters.
+
+Privacy note (paper §V): only hashed, signed *sums* ever cross the pod
+axis — the sketch is non-invertible; raw coordinates never leave a shard.
+
+This module is also the template for the LM-side activation sketcher
+(``repro.train.callbacks``) which reuses ``sketch_shard`` verbatim on
+hidden-state projections.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import candidates as cand_mod
+from repro.core import heavy_hitters as hh_mod
+from repro.core import quantize, sketch as sketch_mod
+from repro.core.candidates import Candidates
+from repro.core.heavy_hitters import HeavyHitters
+from repro.core.quantize import GridSpec
+from repro.core.sketch import CountSketch
+
+
+class GeoSketchResult(NamedTuple):
+    hh: HeavyHitters            # replicated global top-K
+    merged: CountSketch         # replicated merged sketch
+    local_count: jnp.ndarray    # per-shard item counts (diagnostics)
+
+
+def sketch_shard(sk: CountSketch, grid: GridSpec, points: jnp.ndarray,
+                 candidate_pool: int,
+                 mask: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[CountSketch, Candidates]:
+    """One edge node's work: quantize → pack → sketch update + local top-L."""
+    key_hi, key_lo = quantize.points_to_keys(grid, points)
+    sk = sketch_mod.update_sorted(sk, key_hi, key_lo, mask=mask)
+    cands = cand_mod.local_topk(key_hi, key_lo, candidate_pool, mask=mask)
+    return sk, cands
+
+
+def geo_extract(mesh: Mesh, grid: GridSpec, points: jnp.ndarray,
+                *, rows: int, log2_cols: int, top_k: int,
+                candidate_pool: int = 0,
+                data_axes: Union[str, Sequence[str]] = ("data",),
+                seed: int = 0) -> GeoSketchResult:
+    """End-to-end distributed heavy-hitter extraction.
+
+    ``points``: (N, D) global array, batch dim sharded over ``data_axes``.
+    Runs as a single SPMD program: every device sketches its shard, the
+    sketches psum-merge hierarchically, candidates all_gather, and the
+    replicated global top-K comes back.
+    """
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    pool = candidate_pool or 2 * top_k
+    # Hash params are drawn OUTSIDE shard_map from a shared seed — the
+    # paper's requirement that every site uses identical hash functions.
+    sk0 = sketch_mod.init(jax.random.key(seed), rows, log2_cols)
+
+    pspec = P(tuple(data_axes))
+    in_specs = (P(), pspec)           # sketch replicated, points sharded
+    out_specs = (P(), P(), P())       # everything replicated afterwards
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)
+    def spmd(sk, pts):
+        sk_local, cands = sketch_shard(sk, grid, pts, pool)
+        hh, merged = hh_mod.distributed_extract(
+            sk_local, cands, top_k, merge_axes=tuple(data_axes))
+        n_local = jnp.full((), pts.shape[0], jnp.float32)
+        total = jax.lax.psum(n_local, tuple(data_axes))
+        return hh, merged, total
+
+    hh, merged, total = spmd(sk0, points)
+    return GeoSketchResult(hh=hh, merged=merged, local_count=total)
+
+
+def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
+                            shard_fn, *, rows: int, log2_cols: int,
+                            top_k: int, candidate_pool: int = 0,
+                            data_axes: Union[str, Sequence[str]] = ("data",),
+                            seed: int = 0, num_batches: int = 1,
+                            batch_shape: Tuple[int, int] = None
+                            ) -> GeoSketchResult:
+    """Streaming variant: each device *generates/loads* its own batches via
+    ``shard_fn(device_linear_index, batch_index) -> (points, mask)`` traced
+    inside the SPMD program (e.g. a synthetic generator or a sharded file
+    reader).  Memory stays O(batch) per device regardless of stream length —
+    the paper's 'single stream I/O' regime."""
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    pool = candidate_pool or 2 * top_k
+    sk0 = sketch_mod.init(jax.random.key(seed), rows, log2_cols)
+    axis_sizes = [mesh.shape[a] for a in data_axes]
+    n_shards = int(jnp.prod(jnp.asarray(axis_sizes)))
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=(P(),),
+        out_specs=(P(), P(), P()), check_vma=False)
+    def spmd(sk):
+        # linear shard index from the mesh axes
+        idx = jnp.zeros((), jnp.int32)
+        for a in data_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+
+        def body(b, carry):
+            sk, cand_keys = carry
+            pts, mask = shard_fn(idx, b)
+            key_hi, key_lo = quantize.points_to_keys(grid, pts)
+            sk = sketch_mod.update_sorted(sk, key_hi, key_lo, mask=mask)
+            return sk, cand_keys + [(key_hi, key_lo, mask)]
+
+        # python loop over batches (static count) — keeps candidate keys
+        sk_local = sk
+        all_keys = []
+        for b in range(num_batches):
+            pts, mask = shard_fn(idx, b)
+            key_hi, key_lo = quantize.points_to_keys(grid, pts)
+            sk_local = sketch_mod.update_sorted(sk_local, key_hi, key_lo,
+                                                mask=mask)
+            all_keys.append((key_hi, key_lo, mask))
+        khi = jnp.concatenate([k[0] for k in all_keys])
+        klo = jnp.concatenate([k[1] for k in all_keys])
+        kmask = None if all_keys[0][2] is None else \
+            jnp.concatenate([k[2] for k in all_keys])
+        cands = cand_mod.local_topk(khi, klo, pool, mask=kmask)
+        hh, merged = hh_mod.distributed_extract(
+            sk_local, cands, top_k, merge_axes=tuple(data_axes))
+        n_local = jnp.sum(jnp.ones((khi.shape[0],))) if kmask is None \
+            else jnp.sum(kmask.astype(jnp.float32))
+        total = jax.lax.psum(n_local, tuple(data_axes))
+        return hh, merged, total
+
+    hh, merged, total = spmd(sk0)
+    return GeoSketchResult(hh=hh, merged=merged, local_count=total)

@@ -1,0 +1,89 @@
+"""Strongly-universal hash families over 64-bit keys, uint32-limb only.
+
+We use Thorup's *vector multiply-shift* scheme: for a 64-bit key split into
+two 32-bit words (x_hi, x_lo) and independent uniform 64-bit parameters
+(a1, a2, b),
+
+    h(x) = (a1 * x_hi  +  a2 * x_lo  +  b)  >> (64 - l)      in [0, 2**l)
+
+is strongly 2-universal.  The sign hash is the same family with l = 1,
+mapped to {-1, +1}.  All arithmetic is mod 2**64 via :mod:`repro.core.u64`,
+so the construction runs unchanged inside Pallas TPU kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+
+
+class MulShiftParams(NamedTuple):
+    """Parameters for a batch of R independent vector multiply-shift hashes.
+
+    Each field has shape (R,), dtype uint32.  (a1, a2, b) are 64-bit values
+    held as hi/lo limb pairs.
+    """
+    a1_hi: jnp.ndarray
+    a1_lo: jnp.ndarray
+    a2_hi: jnp.ndarray
+    a2_lo: jnp.ndarray
+    b_hi: jnp.ndarray
+    b_lo: jnp.ndarray
+
+    @property
+    def rows(self) -> int:
+        return self.a1_hi.shape[0]
+
+
+def make_params(key: jax.Array, rows: int) -> MulShiftParams:
+    """Draw R independent hash functions' parameters."""
+    bits = jax.random.bits(key, (6, rows), dtype=jnp.uint32)
+    return MulShiftParams(*[bits[i] for i in range(6)])
+
+
+def _accumulate(params: MulShiftParams, key_hi: jnp.ndarray,
+                key_lo: jnp.ndarray) -> u64.U64:
+    """(a1*x_hi + a2*x_lo + b) mod 2**64, broadcast (R, 1) x (items,) -> (R, items)."""
+    a1 = (params.a1_hi[:, None], params.a1_lo[:, None])
+    a2 = (params.a2_hi[:, None], params.a2_lo[:, None])
+    b = (params.b_hi[:, None], params.b_lo[:, None])
+    t1 = u64.mul_u32(a1, key_hi[None, :])
+    t2 = u64.mul_u32(a2, key_lo[None, :])
+    acc = u64.add(t1, t2)
+    # broadcast b against acc
+    acc = u64.add(acc, (jnp.broadcast_to(b[0], acc[0].shape),
+                        jnp.broadcast_to(b[1], acc[1].shape)))
+    return acc
+
+
+def bucket_hash(params: MulShiftParams, key_hi: jnp.ndarray,
+                key_lo: jnp.ndarray, log2_buckets: int) -> jnp.ndarray:
+    """Hash (items,) 64-bit keys into (R, items) buckets in [0, 2**l)."""
+    if not (1 <= log2_buckets <= 32):
+        raise ValueError(f"log2_buckets must be in [1, 32], got {log2_buckets}")
+    acc = _accumulate(params, key_hi, key_lo)
+    hi, _ = acc
+    return hi >> (32 - log2_buckets) if log2_buckets < 32 else hi
+
+
+def sign_hash(params: MulShiftParams, key_hi: jnp.ndarray,
+              key_lo: jnp.ndarray) -> jnp.ndarray:
+    """Hash (items,) keys into (R, items) signs in {-1, +1} (int32)."""
+    acc = _accumulate(params, key_hi, key_lo)
+    bit = (acc[0] >> 31).astype(jnp.int32)
+    return 1 - 2 * bit
+
+
+def fold_u64_to_u32(key_hi: jnp.ndarray, key_lo: jnp.ndarray) -> jnp.ndarray:
+    """Cheap 64->32 bit fold (murmur-style finalizer), for partitioning."""
+    x = key_hi ^ (key_lo * np.uint32(0x9E3779B9))
+    x ^= x >> 16
+    x *= np.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x *= np.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x

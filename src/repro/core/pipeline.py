@@ -1,0 +1,140 @@
+"""Sketch-and-Scale end-to-end pipeline (paper Fig. 1).
+
+    1. set a regular grid            → core.quantize.fit_grid
+    2. count points, find heavy bins → core.sketch + core.heavy_hitters
+    3. representatives per heavy bin → core.replicas
+    4. feed into tSNE / UMAP         → core.tsne / core.umap
+
+Single-host and mesh-distributed front-ends share all stages; only stage 2
+differs (local sketch vs. shard_map + psum via core.geo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geo, heavy_hitters as hh_mod, quantize, replicas
+from repro.core import sketch as sketch_mod
+from repro.core import tsne as tsne_mod
+from repro.core import umap as umap_mod
+from repro.core.heavy_hitters import HeavyHitters
+from repro.core.quantize import GridSpec
+from repro.core.replicas import Representatives
+
+
+@dataclasses.dataclass(frozen=True)
+class SnsConfig:
+    """Paper-parameterized pipeline config (defaults = cancer experiment)."""
+    bins: int = 25                 # M, linear bins per axis
+    rows: int = 16                 # R, sketch rows
+    log2_cols: int = 18            # C = 2^18 ≈ the paper's 2·10^5
+    top_k: int = 20_000            # heavy hitters to extract
+    candidate_pool: int = 0        # 0 -> 2*top_k
+    replica_scheme: str = "count"  # "uniform" | "rank" | "count"
+    max_replicas: int = 8
+    jitter_frac: float = 0.25
+    embedder: str = "umap"         # "umap" | "tsne"
+    embed_dims: int = 2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SnsResult:
+    grid: GridSpec
+    hh: HeavyHitters
+    reps: Representatives
+    embedding: jnp.ndarray         # (live_reps, embed_dims)
+    rep_weight: np.ndarray         # weights of live reps
+    rep_hh_id: np.ndarray          # HH index of each live rep
+    coverage: float                # fraction of stream mass in the HHs
+
+
+def sketch_stage(cfg: SnsConfig, points: jnp.ndarray,
+                 grid: Optional[GridSpec] = None,
+                 mesh=None, data_axes=("data",)
+                 ) -> Tuple[GridSpec, HeavyHitters]:
+    """Stages 1-2: grid + heavy hitters (local or mesh-distributed)."""
+    if grid is None:
+        grid = quantize.fit_grid(points, cfg.bins)
+    if mesh is not None:
+        res = geo.geo_extract(
+            mesh, grid, points, rows=cfg.rows, log2_cols=cfg.log2_cols,
+            top_k=cfg.top_k, candidate_pool=cfg.candidate_pool,
+            data_axes=data_axes, seed=cfg.seed)
+        return grid, res.hh
+    key_hi, key_lo = quantize.points_to_keys(grid, points)
+    sk = sketch_mod.init(jax.random.key(cfg.seed), cfg.rows, cfg.log2_cols)
+    sk = sketch_mod.update_sorted(sk, key_hi, key_lo)
+    hh = hh_mod.extract(sk, key_hi, key_lo, k=cfg.top_k,
+                        candidate_pool=cfg.candidate_pool or None)
+    return grid, hh
+
+
+def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
+                tsne_cfg: Optional[tsne_mod.TsneConfig] = None,
+                umap_cfg: Optional[umap_mod.UmapConfig] = None,
+                ) -> Tuple[Representatives, jnp.ndarray, np.ndarray, np.ndarray]:
+    """Stages 3-4: replicas + tSNE/UMAP on the live representatives."""
+    key = jax.random.key(cfg.seed + 1)
+    krep, kembed = jax.random.split(key)
+    reps = replicas.make_representatives(
+        krep, grid, hh, scheme=cfg.replica_scheme,
+        max_replicas=cfg.max_replicas, jitter_frac=cfg.jitter_frac)
+    pts, w, ids = replicas.compact(reps)
+    x = jnp.asarray(pts)
+    wj = jnp.asarray(w)
+    if cfg.embedder == "tsne":
+        tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
+        emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj)
+    elif cfg.embedder == "umap":
+        uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
+        emb = umap_mod.run_umap(kembed, x, uc, weights=wj)
+    else:
+        raise ValueError(f"unknown embedder {cfg.embedder!r}")
+    return reps, emb, w, ids
+
+
+def run(cfg: SnsConfig, points: jnp.ndarray,
+        grid: Optional[GridSpec] = None, mesh=None, data_axes=("data",),
+        tsne_cfg=None, umap_cfg=None) -> SnsResult:
+    """Full SnS: points → embedding of weighted heavy-hitter representatives."""
+    grid, hh = sketch_stage(cfg, points, grid=grid, mesh=mesh,
+                            data_axes=data_axes)
+    reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
+                                    umap_cfg=umap_cfg)
+    n_total = points.shape[0] * (points.shape[1] if points.ndim == 3 else 1) \
+        if points.ndim == 3 else points.reshape(-1, points.shape[-1]).shape[0]
+    coverage = float(jnp.sum(hh.count) / max(n_total, 1))
+    return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
+                     rep_weight=w, rep_hh_id=ids, coverage=coverage)
+
+
+def assign_points_to_hh(grid: GridSpec, hh: HeavyHitters,
+                        points: jnp.ndarray, chunk: int = 65536
+                        ) -> np.ndarray:
+    """Label raw points by nearest HH cell key (-1 if not an HH cell).
+
+    Used to project HH-level cluster labels back to the raw data, as the
+    paper does for the contingency table (§IV-1).  Chunked exact match on
+    packed keys."""
+    n = points.shape[0]
+    hh_hi = np.asarray(hh.key_hi)
+    hh_lo = np.asarray(hh.key_lo)
+    hh_mask = np.asarray(hh.mask)
+    out = np.full((n,), -1, np.int64)
+    # host-side dict lookup is fastest for exact key matching
+    lut = {}
+    for i, (h, l, m) in enumerate(zip(hh_hi, hh_lo, hh_mask)):
+        if m:
+            lut[(int(h) << 32) | int(l)] = i
+    for s in range(0, n, chunk):
+        pts = jnp.asarray(points[s:s + chunk])
+        khi, klo = quantize.points_to_keys(grid, pts)
+        keys = (np.asarray(khi, np.uint64) << np.uint64(32)) | \
+            np.asarray(klo, np.uint64)
+        out[s:s + chunk] = [lut.get(int(k), -1) for k in keys]
+    return out

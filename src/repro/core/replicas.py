@@ -1,0 +1,90 @@
+"""Heavy hitters → weighted representative points for tSNE/UMAP.
+
+Paper §II-1: identical points are merged by tSNE, so each HH cell is
+replicated with a small uniform jitter (¼ of the cell size).  Three
+weighting schemes, all tested by the authors to give the same cluster
+structure:
+
+* ``"uniform"``  — fixed n_rep replicas per HH;
+* ``"rank"``     — 1 + ⌊log₂(r_max / r)⌋ replicas for rank r;
+* ``"count"``    — 1 + ⌊log₂(f / f_min)⌋ replicas for count f.
+
+Static shapes: the output holds ``total_slots`` points; each HH fills
+``replicas[i]`` of its slot budget, the rest are masked out.  Every HH gets
+the same slot budget = max possible replicas, so no HH can starve.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize, u64
+from repro.core.heavy_hitters import HeavyHitters
+from repro.core.quantize import GridSpec
+
+
+class Representatives(NamedTuple):
+    points: jnp.ndarray    # (slots, D) float32 jittered cell centers
+    weight: jnp.ndarray    # (slots,) float32 — HH count carried by the point
+    hh_id: jnp.ndarray     # (slots,) int32 — which HH the point came from
+    mask: jnp.ndarray      # (slots,) bool
+
+
+def replica_counts(hh: HeavyHitters, scheme: str, max_replicas: int
+                   ) -> jnp.ndarray:
+    """(K,) int32 number of replicas per HH under the paper's schemes."""
+    k = hh.count.shape[0]
+    if scheme == "uniform":
+        n = jnp.full((k,), max_replicas, jnp.int32)
+    elif scheme == "rank":
+        # ranks are 1-based in count-descending order; hh is already sorted
+        r = jnp.arange(1, k + 1, dtype=jnp.float32)
+        r_max = jnp.sum(hh.mask.astype(jnp.float32))       # rank of smallest
+        n = 1 + jnp.floor(jnp.log2(jnp.maximum(r_max / r, 1.0))).astype(jnp.int32)
+    elif scheme == "count":
+        f = jnp.maximum(hh.count, 1e-9)
+        f_min = jnp.min(jnp.where(hh.mask, f, jnp.inf))
+        n = 1 + jnp.floor(jnp.log2(jnp.maximum(f / f_min, 1.0))).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown replica scheme {scheme!r}")
+    n = jnp.clip(n, 1, max_replicas)
+    return jnp.where(hh.mask, n, 0)
+
+
+def make_representatives(key: jax.Array, grid: GridSpec, hh: HeavyHitters,
+                         scheme: str = "count", max_replicas: int = 8,
+                         jitter_frac: float = 0.25) -> Representatives:
+    """HH cells → jittered weighted points, ready for tSNE/UMAP.
+
+    Output has K·max_replicas slots; slot (i, j) is live iff j < n_i.
+    """
+    k = hh.key_hi.shape[0]
+    coords = quantize.unpack(grid, (hh.key_hi, hh.key_lo))    # (K, D)
+    centers = quantize.cell_center(grid, coords)              # (K, D)
+    n = replica_counts(hh, scheme, max_replicas)              # (K,)
+
+    cell = jnp.asarray(grid.cell_size)                        # (D,)
+    jit = jax.random.uniform(key, (k, max_replicas, grid.dims),
+                             minval=-jitter_frac, maxval=jitter_frac)
+    pts = centers[:, None, :] + jit * cell[None, None, :]     # (K, max, D)
+    slot = jnp.arange(max_replicas)[None, :]                  # (1, max)
+    live = slot < n[:, None]                                  # (K, max)
+    # weight: each replica carries count / n so total mass is preserved
+    w = hh.count[:, None] / jnp.maximum(n[:, None].astype(jnp.float32), 1.0)
+    hh_id = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[:, None],
+                             (k, max_replicas))
+    return Representatives(
+        points=pts.reshape(k * max_replicas, grid.dims),
+        weight=jnp.where(live, w, 0.0).reshape(-1),
+        hh_id=hh_id.reshape(-1),
+        mask=live.reshape(-1))
+
+
+def compact(rep: Representatives) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side: drop masked slots -> (points, weights, hh_ids) numpy arrays."""
+    m = np.asarray(rep.mask)
+    return (np.asarray(rep.points)[m], np.asarray(rep.weight)[m],
+            np.asarray(rep.hh_id)[m])

@@ -1,0 +1,173 @@
+"""Vanilla (exact) tSNE in pure JAX — the paper's downstream embedder.
+
+Faithful to van der Maaten & Hinton 2008 + the reference implementation:
+
+* per-point perplexity calibration by binary search over sigma (fixed 50
+  iterations, vectorized over points),
+* symmetrized joint P, early exaggeration, momentum + per-parameter gains,
+* exact O(N²) gradient  4·Σ_j (p_ij − q_ij)(y_i − y_j)/(1 + |y_i − y_j|²).
+
+Weighted extension (SnS): each input point carries a weight w_i (the HH
+count).  P is built from the weighted conditional probabilities, so a
+representative standing for 10⁶ raw points pulls proportionally harder —
+this is the "replication" of paper §II-1 done in closed form (replicas
+are still supported; weights are the numerically-clean equivalent).
+
+The O(N²) pairwise kernels are the compute hot-spot; they are expressed
+as matmul-shaped ops (squared-distance via Gram matrix) so XLA maps them
+to the MXU.  ``repro.kernels.pairwise`` provides the Pallas-fused variant.
+
+Sized for the paper's regime: N = 10⁴–2·10⁴ representatives. N=20k → 3.2 GB
+for the (N,N) float32 P/Q — fits one TPU core's HBM comfortably.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TsneConfig:
+    dims: int = 2
+    perplexity: float = 30.0
+    n_iter: int = 500
+    early_exaggeration: float = 12.0
+    exaggeration_iters: int = 125
+    learning_rate: float = 200.0
+    momentum_start: float = 0.5
+    momentum_final: float = 0.8
+    momentum_switch: int = 125
+    min_gain: float = 0.01
+    sigma_search_iters: int = 50
+
+
+def pairwise_sq_dists(x: jnp.ndarray, y: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
+    """Squared Euclidean distances via the Gram-matrix identity (MXU-shaped)."""
+    y = x if y is None else y
+    xx = jnp.sum(x * x, axis=1)
+    yy = jnp.sum(y * y, axis=1)
+    d = xx[:, None] - 2.0 * (x @ y.T) + yy[None, :]
+    return jnp.maximum(d, 0.0)
+
+
+def _cond_probs_and_entropy(neg_d: jnp.ndarray, beta: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise conditional P and Shannon entropy for precision beta.
+
+    neg_d: (N, N) negative squared distances with -inf on the diagonal.
+    """
+    logits = neg_d * beta[:, None]
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    p = jnp.exp(logits)
+    p_sum = jnp.sum(p, axis=1, keepdims=True)
+    p = p / p_sum
+    # H = -sum p log p, computed stably from logits
+    logp = logits - jnp.log(p_sum)
+    h = -jnp.sum(jnp.where(p > 0, p * logp, 0.0), axis=1)
+    return p, h
+
+
+def calibrate_p(x: jnp.ndarray, perplexity: float,
+                weights: Optional[jnp.ndarray] = None,
+                search_iters: int = 50) -> jnp.ndarray:
+    """Joint symmetrized P with per-point sigma matched to the perplexity.
+
+    Binary search on beta = 1/(2 sigma²) per row, vectorized; fixed
+    iteration count keeps it jit-compatible.
+    """
+    n = x.shape[0]
+    d = pairwise_sq_dists(x)
+    neg_d = -d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    target_h = jnp.log(perplexity)
+
+    def body(_, state):
+        beta, beta_lo, beta_hi = state
+        _, h = _cond_probs_and_entropy(neg_d, beta)
+        too_entropic = h > target_h        # entropy too high -> raise beta
+        beta_lo = jnp.where(too_entropic, beta, beta_lo)
+        beta_hi = jnp.where(too_entropic, beta_hi, beta)
+        beta_next = jnp.where(
+            jnp.isinf(beta_hi), beta * 2.0, 0.5 * (beta_lo + beta_hi))
+        return beta_next, beta_lo, beta_hi
+
+    beta0 = jnp.ones((n,))
+    lo0 = jnp.zeros((n,))
+    hi0 = jnp.full((n,), jnp.inf)
+    beta, _, _ = jax.lax.fori_loop(0, search_iters, body, (beta0, lo0, hi0))
+    p_cond, _ = _cond_probs_and_entropy(neg_d, beta)
+
+    if weights is not None:
+        w = weights / jnp.sum(weights)
+        # weighted symmetrization: P_ij ∝ w_i P(j|i) + w_j P(i|j)
+        p = w[:, None] * p_cond + (w[:, None] * p_cond).T
+    else:
+        p = (p_cond + p_cond.T) / (2.0 * n)
+    p = p / jnp.sum(p)
+    return jnp.maximum(p, 1e-12)
+
+
+def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    n = y.shape[0]
+    num = 1.0 / (1.0 + pairwise_sq_dists(y))
+    num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    q = jnp.maximum(num / jnp.sum(num), 1e-12)
+    return jnp.sum(p * (jnp.log(p) - jnp.log(q)))
+
+
+def _grad_and_kl(p: jnp.ndarray, y: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact tSNE gradient (matmul form) + current KL."""
+    n = y.shape[0]
+    num = 1.0 / (1.0 + pairwise_sq_dists(y))                 # (N, N)
+    num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    z = jnp.sum(num)
+    q = jnp.maximum(num / z, 1e-12)
+    pq = (p - q) * num                                       # (N, N)
+    # grad_i = 4 [ (sum_j pq_ij) y_i - sum_j pq_ij y_j ]
+    grad = 4.0 * (jnp.sum(pq, axis=1, keepdims=True) * y - pq @ y)
+    kl = jnp.sum(p * (jnp.log(p) - jnp.log(q)))
+    return grad, kl
+
+
+class TsneState(NamedTuple):
+    y: jnp.ndarray
+    velocity: jnp.ndarray
+    gains: jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
+             weights: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full tSNE: returns (embedding (N, dims), KL trace (n_iter,))."""
+    n = x.shape[0]
+    p = calibrate_p(x, cfg.perplexity, weights=weights,
+                    search_iters=cfg.sigma_search_iters)
+    y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
+    state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
+                      gains=jnp.ones_like(y0))
+
+    def step(i, carry):
+        state, kls = carry
+        exag = jnp.where(i < cfg.exaggeration_iters,
+                         cfg.early_exaggeration, 1.0)
+        mom = jnp.where(i < cfg.momentum_switch,
+                        cfg.momentum_start, cfg.momentum_final)
+        grad, kl = _grad_and_kl(p * exag, state.y)
+        same_sign = jnp.sign(grad) == jnp.sign(state.velocity)
+        gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
+        gains = jnp.maximum(gains, cfg.min_gain)
+        vel = mom * state.velocity - cfg.learning_rate * gains * grad
+        y = state.y + vel
+        y = y - jnp.mean(y, axis=0, keepdims=True)
+        return TsneState(y, vel, gains), kls.at[i].set(kl)
+
+    state, kls = jax.lax.fori_loop(
+        0, cfg.n_iter, step, (state, jnp.zeros((cfg.n_iter,))))
+    return state.y, kls

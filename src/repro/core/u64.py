@@ -1,0 +1,135 @@
+"""64-bit unsigned arithmetic as uint32 limb pairs.
+
+TPUs have no 64-bit integer datapath, so every 64-bit quantity in this
+codebase (cell keys, hash parameters, hash accumulators) is carried as a
+pair of uint32 arrays ``(hi, lo)``.  All ops are modular (mod 2**64), match
+numpy uint64 semantics, and are safe inside both ``jax.jit`` and Pallas
+kernel bodies (uint32 mul/add/xor/shift are native VPU ops).
+
+A U64 value is just a ``(hi, lo)`` tuple of equal-shaped uint32 arrays.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U64 = Tuple[jnp.ndarray, jnp.ndarray]  # (hi, lo), both uint32
+
+_U32 = jnp.uint32
+_MASK16 = np.uint32(0xFFFF)
+
+
+def u64(hi, lo) -> U64:
+    return jnp.asarray(hi, _U32), jnp.asarray(lo, _U32)
+
+
+def from_u32(x) -> U64:
+    x = jnp.asarray(x, _U32)
+    return jnp.zeros_like(x), x
+
+
+def from_py(value: int, shape=()) -> U64:
+    """Constant U64 from a python int (host side)."""
+    value = int(value) & 0xFFFFFFFFFFFFFFFF
+    hi = np.full(shape, value >> 32, np.uint32)
+    lo = np.full(shape, value & 0xFFFFFFFF, np.uint32)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+def to_py(x: U64) -> np.ndarray:
+    """Host-side: U64 -> numpy uint64 (for tests / IO only)."""
+    hi = np.asarray(x[0], np.uint64)
+    lo = np.asarray(x[1], np.uint64)
+    return (hi << np.uint64(32)) | lo
+
+
+def add(a: U64, b: U64) -> U64:
+    lo = a[1] + b[1]
+    carry = (lo < a[1]).astype(_U32)
+    hi = a[0] + b[0] + carry
+    return hi, lo
+
+
+def add_u32(a: U64, x) -> U64:
+    x = jnp.asarray(x, _U32)
+    lo = a[1] + x
+    carry = (lo < a[1]).astype(_U32)
+    return a[0] + carry, lo
+
+
+def xor(a: U64, b: U64) -> U64:
+    return a[0] ^ b[0], a[1] ^ b[1]
+
+
+def umul32_full(x, y) -> U64:
+    """Full 64-bit product of two uint32 values, via 16-bit limbs.
+
+    Every intermediate fits in uint32:  xh*yl <= (2^16-1)^2 < 2^32, and the
+    added carry is < 2^16.
+    """
+    x = jnp.asarray(x, _U32)
+    y = jnp.asarray(y, _U32)
+    xl, xh = x & _MASK16, x >> 16
+    yl, yh = y & _MASK16, y >> 16
+    t = xl * yl
+    w0 = t & _MASK16
+    k = t >> 16
+    t = xh * yl + k
+    w1 = t & _MASK16
+    w2 = t >> 16
+    t = xl * yh + w1
+    k = t >> 16
+    lo = (t << 16) | w0
+    hi = xh * yh + w2 + k
+    return hi, lo
+
+
+def mul_u32(a: U64, x) -> U64:
+    """(64-bit a) * (32-bit x) mod 2**64."""
+    x = jnp.asarray(x, _U32)
+    hi1, lo1 = umul32_full(a[1], x)   # a.lo * x  -> contributes to both limbs
+    hi = hi1 + a[0] * x               # a.hi * x  -> only low 32 bits survive
+    return hi, lo1
+
+
+def shr(a: U64, s: int) -> U64:
+    """Logical right shift by a *static* amount s in [0, 64)."""
+    s = int(s)
+    if s == 0:
+        return a
+    if s < 32:
+        lo = (a[1] >> s) | (a[0] << (32 - s))
+        hi = a[0] >> s
+        return hi, lo
+    if s == 32:
+        return jnp.zeros_like(a[0]), a[0]
+    return jnp.zeros_like(a[0]), a[0] >> (s - 32)
+
+
+def shl(a: U64, s: int) -> U64:
+    """Left shift by a *static* amount s in [0, 64)."""
+    s = int(s)
+    if s == 0:
+        return a
+    if s < 32:
+        hi = (a[0] << s) | (a[1] >> (32 - s))
+        lo = a[1] << s
+        return hi, lo
+    if s == 32:
+        return a[1], jnp.zeros_like(a[1])
+    return a[1] << (s - 32), jnp.zeros_like(a[1])
+
+
+def bitand_u32(a: U64, mask) -> jnp.ndarray:
+    """Low-word AND (for extracting packed fields that fit in 32 bits)."""
+    return a[1] & jnp.asarray(mask, _U32)
+
+
+def eq(a: U64, b: U64) -> jnp.ndarray:
+    return (a[0] == b[0]) & (a[1] == b[1])
+
+
+def less(a: U64, b: U64) -> jnp.ndarray:
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (a[1] < b[1]))

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (gaussian_mixture, zipf_token_stream,
+                                  clustered_points_sharded)
+from repro.data.loader import ShardedLoader, ShardPlan

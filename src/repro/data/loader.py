@@ -1,0 +1,76 @@
+"""Sharded input pipeline with over-decomposition (straggler mitigation).
+
+Work is split into many more logical shards than hosts (default 16×).
+Each host owns a deterministic *primary* slice; leftover shards from a
+slow/failed host re-queue onto finishers — because assignment is a pure
+function of (epoch, shard count, host count), every host computes the
+same plan with zero coordination.  Resuming after a crash replays the
+plan from the recorded (epoch, cursor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    num_shards: int              # logical shards (≫ hosts)
+    num_hosts: int
+    epoch: int = 0
+
+    def shards_for(self, host: int) -> List[int]:
+        """Deterministic primary assignment: strided round-robin, rotated
+        per epoch so hot shards move between hosts."""
+        rot = (self.epoch * 7919) % self.num_shards
+        return [(s + rot) % self.num_shards
+                for s in range(host, self.num_shards, self.num_hosts)]
+
+    def steal_order(self, host: int) -> List[int]:
+        """Order in which a finished host picks up other hosts' leftovers
+        (reverse order of the victim's own list — steal from the tail)."""
+        order = []
+        for other in range(1, self.num_hosts):
+            victim = (host + other) % self.num_hosts
+            order.extend(reversed(self.shards_for(victim)))
+        return order
+
+
+class ShardedLoader:
+    """Iterates (shard_id, batch) pairs for one host.
+
+    ``make_batch(shard_id, batch_idx)`` generates data purely from ids —
+    works for synthetic generators and for file-backed shards alike.
+    """
+
+    def __init__(self, plan: ShardPlan, host: int,
+                 make_batch: Callable[[int, int], dict],
+                 batches_per_shard: int = 1,
+                 completed: Optional[Sequence[int]] = None):
+        self.plan = plan
+        self.host = host
+        self.make_batch = make_batch
+        self.batches_per_shard = batches_per_shard
+        self.completed = set(completed or ())
+
+    def __iter__(self) -> Iterator[tuple]:
+        for shard in self.plan.shards_for(self.host):
+            if shard in self.completed:
+                continue
+            for b in range(self.batches_per_shard):
+                yield shard, self.make_batch(shard, b)
+            self.completed.add(shard)
+
+    def steal(self, globally_completed: Sequence[int]) -> Iterator[tuple]:
+        """After finishing the primary slice: process other hosts' leftovers
+        that nobody has completed yet (straggler pickup)."""
+        done = set(globally_completed) | self.completed
+        for shard in self.plan.steal_order(self.host):
+            if shard in done:
+                continue
+            for b in range(self.batches_per_shard):
+                yield shard, self.make_batch(shard, b)
+            done.add(shard)
+            self.completed.add(shard)

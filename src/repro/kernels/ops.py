@@ -1,0 +1,108 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, dispatch kernel vs. pure-jnp reference
+(`use_kernel=False` or unavailable platform → ref), and adapt to the
+CountSketch pytree API so callers can swap paths with one flag.
+
+On this CPU container the kernels run in interpret mode (Python-level
+execution of the kernel body); on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as quantize_mod
+from repro.core.hashing import MulShiftParams
+from repro.core.quantize import GridSpec
+from repro.core.sketch import CountSketch
+from repro.kernels import hash_points as _hp
+from repro.kernels import ref as _ref
+from repro.kernels import sketch_estimate as _se
+from repro.kernels import sketch_update as _su
+from repro.kernels import tsne_forces as _tf
+
+
+def _pad_to(x: jnp.ndarray, multiple: int, axis: int = 0,
+            value=0) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def hash_points(params: MulShiftParams, grid: GridSpec, points: jnp.ndarray,
+                log2_cols: int, *, block_items: int = 1024,
+                use_kernel: bool = True, interpret: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused quantize+pack+hash.  Returns (buckets (R, N), signs (R, N))."""
+    if not use_kernel:
+        return _ref.hash_points(params, grid, points, log2_cols)
+    padded, n = _pad_to(points, block_items, axis=0)
+    b, s = _hp.hash_points(params, grid, padded, log2_cols,
+                           block_items=block_items, interpret=interpret)
+    return b[:, :n], s[:, :n]
+
+
+def sketch_update_fused(sk: CountSketch, key_hi: jnp.ndarray,
+                        key_lo: jnp.ndarray,
+                        values: Optional[jnp.ndarray] = None,
+                        *, block_items: int = 1024,
+                        interpret: bool = True) -> CountSketch:
+    """Fused hash+accumulate path (low-latency, C ≤ 2¹⁶ — see kernel doc).
+    Semantics identical to ``sketch.update``."""
+    if sk.cols > (1 << 16):
+        raise ValueError(
+            f"kernel path supports C <= 2^16 (VMEM-resident table); "
+            f"got C={sk.cols}.  Use sketch.update_sorted for bulk streams.")
+    n = key_hi.shape[0]
+    v = jnp.ones((n,), jnp.float32) if values is None \
+        else values.astype(jnp.float32)
+    khi, _ = _pad_to(key_hi, block_items)
+    klo, _ = _pad_to(key_lo, block_items)
+    vpad, _ = _pad_to(v, block_items)          # pad value 0 → no-op updates
+    delta = _su.sketch_update_table(
+        sk.params, khi, klo, vpad, rows=sk.rows, log2_cols=sk.log2_cols,
+        block_items=block_items, interpret=interpret)
+    return sk._replace(table=sk.table + delta.astype(sk.table.dtype))
+
+
+def sketch_estimate_mxu(sk: CountSketch, key_hi: jnp.ndarray,
+                        key_lo: jnp.ndarray, *, block_q: int = 256,
+                        block_c: int = 512, interpret: bool = True
+                        ) -> jnp.ndarray:
+    """MXU estimate path: median over rows of one-hot-gathered counts."""
+    from repro.core import hashing, sketch as sketch_mod
+    n = key_hi.shape[0]
+    buckets = hashing.bucket_hash(sk.params, key_hi, key_lo, sk.log2_cols)
+    signs = hashing.sign_hash(sk.params, key_hi, key_lo)
+    bpad, _ = _pad_to(buckets, block_q, axis=1)
+    spad, _ = _pad_to(signs, block_q, axis=1)
+    est = _se.sketch_estimate_table(
+        sk.table.astype(jnp.float32), bpad, spad,
+        block_q=block_q, block_c=block_c, interpret=interpret)
+    return jnp.median(est[:, :n], axis=0)
+
+
+def tsne_step_fused(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
+                    zp: jnp.ndarray, *, exaggeration: float = 1.0,
+                    block: int = 256, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """One fused tSNE gradient: pass-1 Z reduction + pass-2 force tiles."""
+    n = x.shape[0]
+    xpad, _ = _pad_to(x, block)
+    ypad, _ = _pad_to(y, block)
+    bpad, _ = _pad_to(beta, block)
+    zppad, _ = _pad_to(zp, block, value=1)     # avoid 0-div on padding
+    z = _tf.tsne_z(ypad, block=block, n_valid=n, interpret=interpret)
+    f = _tf.tsne_forces(xpad, ypad, bpad, zppad, z, block=block,
+                        n_valid=n, exaggeration=exaggeration,
+                        interpret=interpret)
+    return f[:n]

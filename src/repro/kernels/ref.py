@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernel tests sweep shapes and
+dtypes and assert allclose against these.  They are also the CPU fallback
+paths used when Pallas is unavailable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, quantize, sketch as sketch_mod, u64
+from repro.core.hashing import MulShiftParams
+from repro.core.quantize import GridSpec
+
+
+def hash_points(params: MulShiftParams, grid: GridSpec,
+                points: jnp.ndarray, log2_cols: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """points (N, D) -> (buckets (R, N) uint32, signs (R, N) int32)."""
+    key_hi, key_lo = quantize.points_to_keys(grid, points)
+    buckets = hashing.bucket_hash(params, key_hi, key_lo, log2_cols)
+    signs = hashing.sign_hash(params, key_hi, key_lo)
+    return buckets, signs
+
+
+def sketch_update(table: jnp.ndarray, buckets: jnp.ndarray,
+                  signs: jnp.ndarray,
+                  values: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """table (R, C) += scatter of signs*values at buckets.  The oracle for
+    the fused accumulate kernel (hashes precomputed)."""
+    r, c = table.shape
+    n = buckets.shape[1]
+    v = jnp.ones((n,), table.dtype) if values is None \
+        else values.astype(table.dtype)
+    upd = signs.astype(table.dtype) * v[None, :]
+    flat_idx = (jnp.arange(r, dtype=jnp.int32)[:, None] * c
+                + buckets.astype(jnp.int32))
+    flat = table.reshape(-1).at[flat_idx.reshape(-1)].add(upd.reshape(-1))
+    return flat.reshape(r, c)
+
+
+def sketch_estimate(table: jnp.ndarray, buckets: jnp.ndarray,
+                    signs: jnp.ndarray) -> jnp.ndarray:
+    """Per-row signed gather: est (R, Q) = sign * table[r, bucket]."""
+    gathered = jnp.take_along_axis(table, buckets.astype(jnp.int32), axis=1)
+    return gathered.astype(jnp.float32) * signs.astype(jnp.float32)
+
+
+def estimate_median(table: jnp.ndarray, buckets: jnp.ndarray,
+                    signs: jnp.ndarray) -> jnp.ndarray:
+    """Full estimate: median over rows of the signed gather -> (Q,)."""
+    return jnp.median(sketch_estimate(table, buckets, signs), axis=0)
+
+
+def tsne_z(y: jnp.ndarray) -> jnp.ndarray:
+    """Repulsive normalizer Z = sum_{i != j} 1/(1+|y_i-y_j|^2)."""
+    n = y.shape[0]
+    d = jnp.sum(y * y, 1)[:, None] - 2 * (y @ y.T) + jnp.sum(y * y, 1)[None]
+    num = 1.0 / (1.0 + jnp.maximum(d, 0.0))
+    num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return jnp.sum(num)
+
+
+def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
+                zp: jnp.ndarray, z: jnp.ndarray,
+                exaggeration: float = 1.0) -> jnp.ndarray:
+    """Fused-tSNE oracle: gradient with P recomputed on the fly from the
+    high-dim points.
+
+    p_cond(j|i) = exp(-beta_i d2x_ij) / zp_i  (zp excludes the diagonal),
+    P = (p_cond + p_cond^T) / 2N,  q = num/z,  grad_i = 4 sum_j (exag*P-q)
+    * num * (y_i - y_j).
+    """
+    n = x.shape[0]
+    d2x = jnp.sum(x * x, 1)[:, None] - 2 * (x @ x.T) + jnp.sum(x * x, 1)[None]
+    d2x = jnp.maximum(d2x, 0.0)
+    pc = jnp.exp(-beta[:, None] * d2x) / zp[:, None]
+    pc = pc.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    p = (pc + pc.T) / (2.0 * n)
+    d2y = jnp.sum(y * y, 1)[:, None] - 2 * (y @ y.T) + jnp.sum(y * y, 1)[None]
+    num = 1.0 / (1.0 + jnp.maximum(d2y, 0.0))
+    num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    q = num / z
+    pq = (exaggeration * p - q) * num
+    return 4.0 * (jnp.sum(pq, 1, keepdims=True) * y - pq @ y)
+
+
+def tsne_zp(x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Row normalizers zp_i = sum_{j != i} exp(-beta_i d2x_ij) (helper for
+    building tsne_forces inputs from calibrated betas)."""
+    n = x.shape[0]
+    d2x = jnp.sum(x * x, 1)[:, None] - 2 * (x @ x.T) + jnp.sum(x * x, 1)[None]
+    d2x = jnp.maximum(d2x, 0.0)
+    e = jnp.exp(-beta[:, None] * d2x)
+    e = e.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return jnp.sum(e, axis=1)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: sketch estimate as MXU one-hot gathers.
+
+``estimate`` needs table[r, h1_r(q)] for Q queries × R rows.  Arbitrary
+gather is slow on TPU; instead each (Q_tile × C_tile) one-hot indicator is
+contracted against the table tile on the MXU:
+
+    est[r, q] = Σ_c  1[h1_r(q) = c] · table[r, c]        (then · sign)
+
+Grid is (q_tiles, c_tiles); the output tile revisits across the C
+dimension, and exactly one C tile contributes per (r, q), so the signed
+contribution accumulates to the gathered value.  Work is R·Q·C MAC — for
+the paper's query load (Q = 2·10⁴ candidates, R = 16, C = 2¹⁸) that is
+8.4·10¹⁰ MAC ≈ 0.9 ms at v5e's MXU rate, versus a scalar gather that
+would issue R·Q = 3.2·10⁵ serialized VMEM reads.
+
+The row-wise median (R is 16; tiny) runs as a normal XLA op outside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(table_ref, buckets_ref, signs_ref, out_ref,
+            *, rows: int, block_c: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c_off = pl.program_id(1) * block_c
+    col_ids = c_off + jax.lax.broadcasted_iota(
+        jnp.int32, (buckets_ref.shape[1], block_c), 1)      # (Qt, Ct)
+    for r in range(rows):                                   # static unroll
+        b = buckets_ref[r, :].astype(jnp.int32)             # (Qt,)
+        onehot = (b[:, None] == col_ids).astype(jnp.float32)
+        gathered = jnp.dot(onehot, table_ref[r, :].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)   # (Qt,)
+        out_ref[r, :] += signs_ref[r, :].astype(jnp.float32) * gathered
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_c", "interpret"))
+def sketch_estimate_table(table: jnp.ndarray, buckets: jnp.ndarray,
+                          signs: jnp.ndarray, *, block_q: int = 256,
+                          block_c: int = 512, interpret: bool = True
+                          ) -> jnp.ndarray:
+    """(R, C) table + (R, Q) buckets/signs → (R, Q) signed estimates.
+
+    Q must be a multiple of block_q, C of block_c (ops.py pads queries)."""
+    r, c = table.shape
+    q = buckets.shape[1]
+    assert q % block_q == 0 and c % block_c == 0, (q, block_q, c, block_c)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, rows=r, block_c=block_c),
+        grid=(q // block_q, c // block_c),
+        in_specs=[
+            pl.BlockSpec((r, block_c), lambda qi, ci: (0, ci)),
+            pl.BlockSpec((r, block_q), lambda qi, ci: (0, qi)),
+            pl.BlockSpec((r, block_q), lambda qi, ci: (0, qi)),
+        ],
+        out_specs=pl.BlockSpec((r, block_q), lambda qi, ci: (0, qi)),
+        out_shape=jax.ShapeDtypeStruct((r, q), jnp.float32),
+        interpret=interpret,
+    )(table, buckets, signs)

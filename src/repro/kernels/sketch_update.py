@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused hash + ±1 accumulate into a VMEM-resident table.
+
+The paper's GPU implementation scatter-adds into the sketch with CUDA
+atomics.  TPUs have no atomics — instead we exploit the *sequential* TPU
+grid: the (R, C) table is an output block whose index_map pins it to the
+same VMEM tile for every grid step ("output revisiting"), so accumulation
+across item blocks is race-free by construction.
+
+Per grid step: a (block_items,) slab of pre-packed 64-bit keys is hashed
+for all R rows *vectorized* (VPU), then accumulated with an unrolled
+scalar loop (R dynamic stores per item).  The scalar stores serialize on
+real hardware, so this kernel is the **low-latency small-batch path**
+(items ≲ 10⁵ per call: decode-time activation sketching, per-microbatch
+gradient sketches).  The bulk path for 10⁸⁺ items/call is
+``sketch.update_sorted`` (XLA sort → segment-sum → one deduped scatter),
+which turns random access into sequential streaming — see DESIGN.md §3.
+
+VMEM budget: table (R=16, C=2¹⁵) f32 = 2 MiB + block of keys — fits v5e's
+16 MiB VMEM with room for double-buffered inputs; ops.py enforces
+C ≤ 2¹⁶ for the kernel path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hashing
+from repro.core.hashing import MulShiftParams
+
+
+def _kernel(key_hi_ref, key_lo_ref, values_ref, params_ref, table_ref,
+            *, rows: int, log2_cols: int, block_items: int):
+    # zero the table on the first visit
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    params = MulShiftParams(*(params_ref[i, :] for i in range(6)))
+    khi = key_hi_ref[0, :]
+    klo = key_lo_ref[0, :]
+    buckets = hashing.bucket_hash(params, khi, klo, log2_cols)  # (R, B)
+    signs = hashing.sign_hash(params, khi, klo)                 # (R, B)
+    vals = values_ref[0, :]                                     # (B,)
+    upd = signs.astype(table_ref.dtype) * vals[None, :].astype(table_ref.dtype)
+
+    def body(i, _):
+        for r in range(rows):                    # static unroll over rows
+            c = buckets[r, i].astype(jnp.int32)
+            table_ref[r, pl.dslice(c, 1)] += upd[r, i]
+        return 0
+
+    jax.lax.fori_loop(0, block_items, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rows", "log2_cols", "block_items", "interpret"))
+def sketch_update_table(params: MulShiftParams, key_hi: jnp.ndarray,
+                        key_lo: jnp.ndarray, values: jnp.ndarray,
+                        *, rows: int, log2_cols: int,
+                        block_items: int = 1024,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Build a fresh (R, C) f32 table from (N,) keys + values in one fused
+    pass.  N must be a multiple of block_items (ops.py pads with value=0)."""
+    n = key_hi.shape[0]
+    assert n % block_items == 0, (n, block_items)
+    nb = n // block_items
+    cols = 1 << log2_cols
+    pmat = jnp.stack(list(params), axis=0)            # (6, R)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, rows=rows, log2_cols=log2_cols,
+                          block_items=block_items),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block_items), lambda i: (0, i)),
+            pl.BlockSpec((1, block_items), lambda i: (0, i)),
+            pl.BlockSpec((1, block_items), lambda i: (0, i)),
+            pl.BlockSpec((6, rows), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(key_hi[None, :], key_lo[None, :], values[None, :], pmat)

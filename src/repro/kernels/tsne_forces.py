@@ -1,0 +1,142 @@
+"""Pallas TPU kernels: flash-style fused tSNE gradient.
+
+Exact tSNE materializes three (N, N) matrices per iteration (P, Q, and
+(P−Q)·num).  At the paper's N = 2·10⁴ representatives that is 4.8 GB of
+HBM traffic per iteration; beyond N ≈ 10⁵ it stops fitting entirely.  This
+kernel *never materializes any N×N matrix*: like flash attention, it
+streams (Bi × Bj) tiles, recomputing both the high-dim affinity P (from
+the calibrated per-point precisions beta and row normalizers zp) and the
+low-dim kernel Q on the fly, accumulating forces tile-by-tile in VMEM.
+
+Two passes per iteration (Z is a global reduction that must precede the
+force weighting — same structure as flash attention's softmax statistics):
+
+    pass 1 (``tsne_z``):       Z = Σ_{i≠j} 1/(1+|y_i−y_j|²)
+    pass 2 (``tsne_forces``):  F_i = 4 Σ_j (exag·P_ij − num_ij/Z)·num_ij·(y_i−y_j)
+
+Both are (N/B)² tile grids; all matmuls (x_i·x_jᵀ, pq·y_j) hit the MXU.
+HBM traffic drops from O(N²) to O(N²·D/B) — with B = 512, D ≤ 10, that is
+a ≥ 50× reduction, turning the embedder from memory-bound to compute-bound
+(see EXPERIMENTS.md §Perf for the roofline arithmetic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sq_dists(a, b):
+    """(Bi, D), (Bj, D) -> (Bi, Bj) squared distances, MXU-shaped."""
+    a2 = jnp.sum(a * a, axis=1)
+    b2 = jnp.sum(b * b, axis=1)
+    cross = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(a2[:, None] - 2.0 * cross + b2[None, :], 0.0)
+
+
+def _pair_mask(bi, bj, block, n_valid):
+    """(Bi, Bj) True where the pair is valid (off-diagonal, not padding)."""
+    gi = bi * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    gj = bj * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    return (gi != gj) & (gi < n_valid) & (gj < n_valid)
+
+
+def _z_kernel(y_i_ref, y_j_ref, z_ref, *, block: int, n_valid: int):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    d2 = _sq_dists(y_i_ref[...], y_j_ref[...])
+    num = 1.0 / (1.0 + d2)
+    mask = _pair_mask(pl.program_id(0), pl.program_id(1), block, n_valid)
+    z_ref[0, 0] += jnp.sum(jnp.where(mask, num, 0.0))
+
+
+def _force_kernel(x_i_ref, x_j_ref, y_i_ref, y_j_ref, beta_i_ref,
+                  beta_j_ref, zp_i_ref, zp_j_ref, z_ref, out_ref,
+                  *, block: int, n_valid: int, exaggeration: float):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mask = _pair_mask(pl.program_id(0), pl.program_id(1), block, n_valid)
+    # high-dim affinity, recomputed on the fly (never stored)
+    d2x = _sq_dists(x_i_ref[...], x_j_ref[...])
+    pc_ij = jnp.exp(-beta_i_ref[...] * d2x) / zp_i_ref[...]        # (Bi,Bj)
+    pc_ji = jnp.exp(-beta_j_ref[...].T * d2x) / zp_j_ref[...].T
+    p = jnp.where(mask, (pc_ij + pc_ji) / (2.0 * n_valid), 0.0)
+    # low-dim kernel
+    y_i = y_i_ref[...]
+    y_j = y_j_ref[...]
+    num = 1.0 / (1.0 + _sq_dists(y_i, y_j))
+    num = jnp.where(mask, num, 0.0)
+    q = num / z_ref[0, 0]
+    pq = (exaggeration * p - q) * num
+    out_ref[...] += 4.0 * (
+        jnp.sum(pq, axis=1, keepdims=True) * y_i
+        - jnp.dot(pq, y_j, preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n_valid", "interpret"))
+def tsne_z(y: jnp.ndarray, *, block: int = 256, n_valid: int = None,
+           interpret: bool = True) -> jnp.ndarray:
+    """Repulsive normalizer Z.  y is (N, dims), N a multiple of block."""
+    n = y.shape[0]
+    n_valid = n if n_valid is None else n_valid
+    assert n % block == 0
+    nb = n // block
+    z = pl.pallas_call(
+        functools.partial(_z_kernel, block=block, n_valid=n_valid),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, y.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(y, y)
+    return z[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "n_valid", "exaggeration", "interpret"))
+def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
+                zp: jnp.ndarray, z: jnp.ndarray, *, block: int = 256,
+                n_valid: int = None, exaggeration: float = 1.0,
+                interpret: bool = True) -> jnp.ndarray:
+    """Fused tSNE gradient.  x (N, Dh), y (N, dims), beta/zp (N,), z scalar.
+
+    N must be a multiple of ``block`` (ops.py pads; padded rows produce
+    zero force and are masked out of every pair).
+    """
+    n = x.shape[0]
+    n_valid = n if n_valid is None else n_valid
+    assert n % block == 0
+    nb = n // block
+    beta2 = beta[:, None]
+    zp2 = zp[:, None]
+    zmat = jnp.reshape(z, (1, 1)).astype(jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_force_kernel, block=block, n_valid=n_valid,
+                          exaggeration=float(exaggeration)),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, y.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, y.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x, x, y, y, beta2, beta2, zp2, zp2, zmat)

@@ -1,0 +1,308 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the
+compiled artifact yields memory_analysis (fits?), cost_analysis
+(FLOPs/bytes for §Roofline), and the optimized HLO (collective bytes).
+
+Usage:
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/]
+    python -m repro.launch.dryrun --all --both-meshes   # the full matrix
+
+Results are one JSON per cell (resumable: existing files are skipped).
+"""
+# The VERY FIRST lines — before ANY other import, jax locks the device
+# count on first init:
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import sharding as shlib
+from repro.launch.mesh import dp_axes, dp_size, make_production_mesh, tp_size
+from repro.models.config import SHAPES, shape_applicable
+from repro.train.steps import (TrainStepConfig, make_train_step,
+                               make_prefill_step, make_decode_step,
+                               make_batch_specs, make_decode_specs,
+                               param_specs, train_state_specs)
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str, pod_boundary: int = 256
+                              ) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+
+    Uses the op RESULT type (for all-gather/all-to-all the result is the
+    full gathered tensor = wire bytes; for all-reduce/reduce-scatter ~the
+    reduced payload).  Cross-pod ops are detected from replica_groups
+    containing device ids on both sides of ``pod_boundary``.
+    """
+    per_kind: Dict[str, int] = {}
+    dcn_bytes = 0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:          # async pairs: count the start only
+            continue
+        _, type_str, kind = m.groups()
+        b = _shape_bytes(type_str)
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        count += 1
+        gm = re.search(r"replica_groups=\{?\{([^}]*)\}", line)
+        if gm:
+            try:
+                ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+                if ids and (min(ids) < pod_boundary <= max(ids)):
+                    dcn_bytes += b
+            except ValueError:
+                pass
+    return {"per_kind": per_kind, "total": sum(per_kind.values()),
+            "dcn": dcn_bytes, "num_ops": count}
+
+
+def _mem_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(ma, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+    except Exception as e:                                   # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _cost_dict(compiled) -> Dict[str, Any]:
+    try:
+        ca = compiled.cost_analysis()
+        if ca is None:
+            return {}
+        keep = {}
+        for k, v in ca.items():
+            if k in ("flops", "bytes accessed", "optimal_seconds") or \
+                    k.startswith("bytes accessed"):
+                keep[k] = float(v)
+        return keep
+    except Exception as e:                                   # noqa: BLE001
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy: Optional[shlib.ShardingPolicy] = None,
+             save_hlo: Optional[str] = None,
+             remat_policy: str = "nothing",
+             capacity_factor: Optional[float] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the record for §Dry-run."""
+    pol = policy or shlib.ShardingPolicy()
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    shp = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": "(2,16,16)" if multi_pod else "(16,16)",
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = tp_size(mesh)
+    dp = dp_axes(mesh)
+    shlib.set_activation_sharding(mesh, dp, pol.tp_axis,
+                                  act_mode=pol.act_mode,
+                                  moe_constraint=pol.moe_constraint)
+    rec["policy"] = {"act_mode": pol.act_mode, "fsdp": pol.fsdp,
+                     "moe_constraint": pol.moe_constraint,
+                     "remat_policy": remat_policy}
+    t0 = time.time()
+    try:
+        if shp.kind == "train":
+            tcfg = TrainStepConfig(remat_policy=remat_policy)
+            state_shape = train_state_specs(cfg, tcfg, tp=tp)
+            batch_shape = make_batch_specs(cfg, shp.global_batch, shp.seq_len)
+            state_sh = shlib.to_shardings(
+                mesh, shlib.train_state_pspecs(state_shape, pol))
+            batch_sh = shlib.to_shardings(
+                mesh, shlib.batch_pspecs(batch_shape, mesh))
+            step = make_train_step(cfg, tcfg,
+                                   grad_shardings=state_sh["params"])
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None), donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, batch_shape)
+        elif shp.kind == "prefill":
+            p_shape = param_specs(cfg, tp=tp)
+            batch_shape = make_batch_specs(cfg, shp.global_batch, shp.seq_len)
+            p_sh = shlib.to_shardings(mesh, shlib.param_pspecs(p_shape, pol))
+            batch_sh = shlib.to_shardings(
+                mesh, shlib.batch_pspecs(batch_shape, mesh))
+            _, dstate_shape = make_decode_specs(cfg, shp.global_batch,
+                                                shp.seq_len, tp=tp)
+            dstate_sh = shlib.to_shardings(
+                mesh, shlib.decode_state_pspecs(dstate_shape, mesh,
+                                                shp.global_batch, pol))
+            fn = make_prefill_step(cfg, shp.seq_len, tp=tp)
+            jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh),
+                             out_shardings=(None, dstate_sh))
+            lowered = jitted.lower(p_shape, batch_shape)
+        else:  # decode
+            p_shape = param_specs(cfg, tp=tp)
+            p_sh = shlib.to_shardings(mesh, shlib.param_pspecs(p_shape, pol))
+            token_shape, dstate_shape = make_decode_specs(
+                cfg, shp.global_batch, shp.seq_len, tp=tp)
+            dstate_sh = shlib.to_shardings(
+                mesh, shlib.decode_state_pspecs(dstate_shape, mesh,
+                                                shp.global_batch, pol))
+            token_sh = NamedSharding(
+                mesh, P(dp if shp.global_batch >= dp_size(mesh) else None,
+                        None))
+            fn = make_decode_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, token_sh, dstate_sh),
+                             out_shardings=(None, dstate_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_shape, token_shape, dstate_shape)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        hlo = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze_hlo
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": _mem_dict(compiled),
+            "cost": _cost_dict(compiled),
+            "collectives": collective_bytes_from_hlo(hlo),
+            "hlo_tripaware": analyze_hlo(hlo),
+            "hlo_lines": hlo.count("\n"),
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+            "global_batch": shp.global_batch,
+            "seq_len": shp.seq_len,
+            "kind": shp.kind,
+            "devices": int(np.prod(list(mesh.shape.values()))),
+        })
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+    except Exception as e:                                   # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        shlib.set_activation_sharding(None, None, None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--act-mode", default="embed_tp",
+                    choices=("embed_tp", "seq_tp", "dp_only"))
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-constraint", action="store_true")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=("nothing", "dots"))
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    policy = shlib.ShardingPolicy(
+        fsdp=not args.no_fsdp, act_mode=args.act_mode,
+        moe_constraint=args.moe_constraint)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                if args.both_meshes:
+                    cells.append((a, s, False))
+                    cells.append((a, s, True))
+                else:
+                    cells.append((a, s, args.multi_pod))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2pod' if mp else '1pod'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        rec = run_cell(arch, shape, mp, policy=policy,
+                       save_hlo=args.save_hlo,
+                       remat_policy=args.remat_policy,
+                       capacity_factor=args.capacity_factor)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            fl = rec["cost"].get("flops", 0)
+            extra = (f" flops={fl:.3e} coll={rec['collectives']['total']:.3e}B"
+                     f" compile={rec['compile_s']}s")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

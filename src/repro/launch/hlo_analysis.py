@@ -1,0 +1,219 @@
+"""Trip-count-aware HLO cost accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes/collectives by the trip
+count (verified: a 10-step scanned matmul reports 1 step's flops).  This
+module re-derives the three roofline inputs from the optimized HLO text
+*with* loop multipliers:
+
+* dot FLOPs: 2 · numel(result) · prod(contracting dims), from each
+  ``dot`` op + a per-computation symbol table for operand shapes,
+  multiplied by the product of enclosing ``known_trip_count``s;
+* HBM bytes: Σ (operand + result bytes) over ops that touch memory
+  (post-fusion, an op's operands/results are its actual HBM traffic;
+  fusion-internal temporaries stay in registers/VMEM);
+* collective bytes: per-kind result-shape bytes; DCN-crossing ops
+  detected from replica_groups spanning the pod boundary.
+
+Non-dot FLOPs (elementwise, transcendental) are not counted — transformer
+steps are ≥95% dot FLOPs; the omission is conservative for the compute
+term and documented in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# type may be a tuple containing /*index=N*/ comments (with '=');
+# non-greedy up to the first 'opkind(' token.
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                    r"(.+?)\s+([\w\-]+)\(")
+# header params may contain nested tuple parens; key on the leading name
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,{} ]*)\}\}")
+
+_NO_MEM_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "type_str", "kind", "line")
+
+    def __init__(self, name, type_str, kind, line):
+        self.name, self.type_str, self.kind, self.line = \
+            name, type_str, kind, line
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{") and " -> " in line \
+                    and not line.startswith(" "):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3), line))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry          # type: ignore
+    return comps
+
+
+def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
+    mres = 1
+    for _, dims in _dims(op.type_str):
+        for d in dims:
+            mres *= d
+    # contracting dims from the lhs operand's shape
+    args = op.line.split(op.kind + "(", 1)[1]
+    lhs_name = args.split(",")[0].strip().lstrip("%")
+    lhs_type = symtab.get(lhs_name, "")
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if cm and lhs_type:
+        ldims = _dims(lhs_type)
+        if ldims:
+            shape = ldims[0][1]
+            for ci in cm.group(1).split(","):
+                if ci.strip():
+                    idx = int(ci)
+                    if idx < len(shape):
+                        contract *= shape[idx]
+    return 2.0 * mres * contract
+
+
+def _op_bytes(op: _Op, symtab: Dict[str, str]) -> int:
+    if op.kind in _NO_MEM_OPS:
+        return 0
+    total = _type_bytes(op.type_str)
+    args = op.line.split(op.kind + "(", 1)[1]
+    # operand list ends at the first ")," or ")" at depth 0
+    depth, end = 0, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    for ref in args[:end].split(","):
+        ref = ref.strip().lstrip("%")
+        if ref in symtab:
+            total += _type_bytes(symtab[ref])
+    return total
+
+
+def _crosses_boundary(line: str, boundary: int) -> bool:
+    gm = _GROUPS_RE.search(line)
+    if not gm:
+        return False
+    for grp in gm.group(1).split("},{"):
+        ids = [int(x) for x in re.findall(r"\d+", grp)]
+        if ids and min(ids) < boundary <= max(ids):
+            return True
+    return False
+
+
+def analyze_hlo(hlo: str, pod_boundary: int = 256) -> Dict[str, Any]:
+    """Full trip-count-aware accounting for one SPMD module (per device)."""
+    comps = _parse_computations(hlo)
+    entry_name = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def cost(cname: str, stack=()) -> Dict[str, float]:
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or cname in stack:
+            return {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_dcn": 0.0,
+                    "coll_ops": 0.0,
+                    **{f"coll_{k}": 0.0 for k in COLLECTIVES}}
+        symtab = {op.name: op.type_str for op in comps[cname]}
+        acc = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_dcn": 0.0,
+               "coll_ops": 0.0, **{f"coll_{k}": 0.0 for k in COLLECTIVES}}
+        for op in comps[cname]:
+            if op.kind == "dot":
+                acc["flops"] += _dot_flops(op, symtab)
+            acc["bytes"] += _op_bytes(op, symtab)
+            base_kind = op.kind.replace("-start", "")
+            if base_kind in COLLECTIVES and not op.kind.endswith("-done"):
+                b = _type_bytes(op.type_str)
+                acc["coll"] += b
+                acc[f"coll_{base_kind}"] += b
+                acc["coll_ops"] += 1
+                if _crosses_boundary(op.line, pod_boundary):
+                    acc["coll_dcn"] += b
+            # --- children ---
+            mult = 1.0
+            if op.kind == "while":
+                tm = _TRIP_RE.search(op.line)
+                mult = float(tm.group(1)) if tm else 1.0
+            children = _CALLED_RE.findall(op.line)
+            children += _COND_RE.findall(op.line)
+            bm = _BRANCH_RE.search(op.line)
+            if bm:
+                children += [c.strip().lstrip("%")
+                             for c in bm.group(1).split(",")]
+            for ch in children:
+                sub = cost(ch, stack + (cname,))
+                for k in acc:
+                    acc[k] += mult * sub[k]
+        memo[cname] = acc
+        return acc
+
+    total = cost(entry_name) if entry_name else {
+        "flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_dcn": 0.0,
+        "coll_ops": 0.0, **{f"coll_{k}": 0.0 for k in COLLECTIVES}}
+    return {
+        "flops": total["flops"],
+        "bytes": total["bytes"],
+        "collective_bytes": total["coll"],
+        "collective_dcn_bytes": total["coll_dcn"],
+        "collective_ops": total["coll_ops"],
+        "per_kind": {k: total[f"coll_{k}"] for k in COLLECTIVES
+                     if total[f"coll_{k}"] > 0},
+    }

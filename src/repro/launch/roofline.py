@@ -1,0 +1,193 @@
+"""Roofline analysis from dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Per (arch × shape × mesh) cell, three terms in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = ICI_bytes / ICI_bw  +  DCN_bytes / DCN_bw
+
+The SPMD HLO module is the per-device program, so cost_analysis FLOPs /
+bytes are already per-device.  MODEL_FLOPS uses the 6·N·D convention
+(2·N·B for single-token decode), giving the useful-compute ratio that
+catches remat/padding/dispatch waste.
+
+Hardware constants (TPU v5e, per the brief):
+    197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI · ~25 GB/s DCN.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+
+def analytic_hbm_bytes(rec: Dict[str, Any]) -> float:
+    """Per-device HBM traffic model for one step (TPU fusion assumed).
+
+    The HLO-text byte count is a gross over-estimate on this container:
+    the CPU backend materializes every intermediate that the TPU backend
+    would fuse into registers/VMEM.  This analytic model counts only the
+    traffic a fused TPU execution must pay:
+
+    train:   weights 3× (fwd + bwd-dgrad + bwd-wgrad passes over the
+             gathered per-layer tiles) + optimizer state (read m,v,p_f32 +
+             write back = 7 f32 passes over the local shard) + remat
+             boundary activations (write + 2 reads) + logits row.
+    prefill: weights 1× + KV cache write + boundary activations 1×.
+    decode:  weights(active) 1× + full KV/SSM cache read + tiny writes.
+    """
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    cfg = get_config(rec["arch"])
+    shp = SHAPES[rec["shape"]]
+    dev = rec["devices"]
+    tp = 16
+    dp = dev // tp
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    bsz_local = max(shp.global_batch // dp, 1)
+    d = cfg.d_model
+
+    if shp.kind == "train":
+        w = 3 * (2 * n_params) / dev            # bf16 weights ×3 passes
+        opt = 7 * (4 * n_params) / dev          # f32 m,v,master r/w
+        act = 3 * cfg.num_layers * bsz_local * shp.seq_len * (2 * d) / tp
+        logits = 3 * bsz_local * shp.seq_len * 2 * cfg.vocab_size / tp
+        return w + opt + act + logits
+    if shp.kind == "prefill":
+        w = (2 * n_params) / dev
+        kv_w = (2 * cfg.num_layers * bsz_local * shp.seq_len
+                * cfg.num_kv_heads * cfg.head_dim * 2) / tp
+        act = cfg.num_layers * bsz_local * shp.seq_len * (2 * d) / tp
+        return w + kv_w + act
+    # decode: weights once + cache read
+    w = (2 * n_active) / dev
+    if cfg.family in ("ssm", "hybrid"):
+        n_attn = sum(cfg.is_attn_layer(i) for i in range(cfg.num_layers))
+        n_ssm = cfg.num_layers - n_attn
+        cache = (n_attn * shp.global_batch * shp.seq_len
+                 * cfg.num_kv_heads * cfg.head_dim * 2
+                 + n_ssm * shp.global_batch * cfg.ssm_heads
+                 * cfg.ssm_headdim * cfg.ssm_state * 4) / dev
+    else:
+        layers = cfg.num_layers + cfg.encoder_layers
+        cache = (layers * shp.global_batch * shp.seq_len
+                 * cfg.num_kv_heads * cfg.head_dim * 2) / dev
+        if cfg.encoder_layers:
+            cache *= 2                         # self + cross caches
+    return w + cache
+
+
+def roofline_terms(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """Compute the three terms + bottleneck for one dry-run record.
+
+    FLOPs and collective bytes: trip-count-aware HLO accounting
+    (hlo_analysis.py).  Memory: analytic fused-TPU traffic model (the raw
+    HLO bytes, reported as ``hbm_hlo_upper_gb``, over-count CPU-backend
+    materialization ~100-1000×).
+    """
+    if rec.get("status") != "ok":
+        return {"status": rec.get("status", "missing"),
+                "reason": rec.get("reason", rec.get("error", ""))[:200]}
+    ta = rec.get("hlo_tripaware", {})
+    flops = ta.get("flops", 0.0)
+    coll_total = ta.get("collective_bytes", 0.0)
+    dcn = ta.get("collective_dcn_bytes", 0.0)
+    ici = coll_total - dcn
+    bytes_acc = analytic_hbm_bytes(rec)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = ici / ICI_BW + dcn / DCN_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    # useful-model-FLOPs ratio
+    n_act = rec["active_param_count"]
+    dev = rec["devices"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        model_flops = 6 * n_act * tokens
+    elif rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        model_flops = 2 * n_act * tokens
+    else:  # decode: one token per sequence
+        model_flops = 2 * n_act * rec["global_batch"]
+    hlo_total = flops * dev
+    ratio = model_flops / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful compute time / achievable step time
+    t_star = max(t_compute, t_memory, t_coll)
+    frac = (model_flops / dev / PEAK_FLOPS) / t_star if t_star else 0.0
+    return {
+        "status": "ok",
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": round(ratio, 4),
+        "roofline_frac": round(frac, 4),
+        "ici_bytes": ici, "dcn_bytes": dcn,
+        "hbm_hlo_upper_gb": round(ta.get("bytes", 0.0) / 2**30, 1),
+        "mem_per_dev_gb": round(
+            ((rec["memory"].get("argument_bytes") or 0)
+             + (rec["memory"].get("temp_bytes") or 0)
+             + (rec["memory"].get("output_bytes") or 0)
+             - (rec["memory"].get("alias_bytes") or 0)) / 2**30, 2),
+    }
+
+
+def build_table(result_dir: str) -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "mesh": rec["mesh"]}
+        row.update(roofline_terms(rec))
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | useful ratio | roofline frac | "
+           "mem/dev (GB) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"{r.get('status')} ({r.get('reason', '')[:60]}) | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {1e3 * r['compute_s']:.2f} | {1e3 * r['memory_s']:.2f} "
+            f"| {1e3 * r['collective_s']:.2f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_frac']:.3f} "
+            f"| {r['mem_per_dev_gb']} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = build_table(args.results)
+    print(to_markdown(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Production serving launcher: continuous batched decode.
+
+    python -m repro.launch.serve --arch jamba-v0.1-52b --smoke \
+        --batch 8 --prompt-len 64 --gen 32 [--mesh 2,2]
+
+Prefill + decode loop with KV/SSM caches — the same serve_step the
+decode_32k / long_500k dry-run cells lower at pod scale.
+"""
+import os
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--host-devices", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import model as model_mod
+    from repro.train.steps import make_prefill_step, make_decode_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = model_mod.init_params(jax.random.key(0), cfg)
+    cache_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.num_prefix, cfg.d_model), cfg.pdtype)
+    if cfg.encoder_layers:
+        batch["src_embeds"] = 0.02 * jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), cfg.pdtype)
+
+    t0 = time.perf_counter()
+    logits, state = prefill(params, batch)
+    jax.block_until_ready(logits)
+    print(f"[prefill] {args.batch}x{args.prompt_len} "
+          f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+
+    def sample(logits, k):
+        if args.temperature <= 0:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(k, logits / args.temperature, -1)
+
+    tok = sample(logits, key)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    n_out = 1
+    for i in range(args.gen - 1):
+        logits, state = decode(params, tok, state)
+        tok = sample(logits, jax.random.fold_in(key, i))[:, None] \
+            .astype(jnp.int32)
+        n_out += 1
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"[decode] {n_out - 1} steps, "
+          f"{dt * 1e3 / max(n_out - 1, 1):.1f} ms/token, "
+          f"{args.batch * (n_out - 1) / dt:.0f} tok/s aggregate")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Sharding rules: parameter / optimizer / batch / decode-state
+PartitionSpecs for the production mesh.
+
+Baseline policy (hillclimbed variants in EXPERIMENTS.md §Perf):
+
+* weights: TP over "model" on heads / d_ff / experts / d_inner / vocab,
+  FSDP (ZeRO-3) over "data" on the other big dim — gathered per-layer
+  inside the scan by GSPMD;
+* activations at layer boundaries: (batch → dp axes, seq → None,
+  embed → "model") — Megatron-SP style, keeps the 80-layer residual
+  stream at 1/16 size per device;
+* KV caches (decode): batch → dp, seq → "model" (flash-decoding style:
+  GSPMD turns softmax/context over the sharded seq dim into the
+  max/sum/weighted-V all-reduce combine);  batch-1 long-context shards
+  seq over every axis.
+
+Param rules are matched by tree *path* (leaf names are stable across all
+families), so one table covers every assigned arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True              # shard weights over "data" (ZeRO-3)
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    seq_shard_decode: bool = True  # KV-cache seq over "model"
+    # activation layout at layer boundaries (hillclimbed — §Perf):
+    #   "embed_tp": (dp, None, "model")  Megatron-SP style   [baseline]
+    #   "seq_tp":   (dp, "model", None)  sequence-parallel blocks
+    #   "dp_only":  (dp, None, None)     replicated over model
+    act_mode: str = "embed_tp"
+    moe_constraint: bool = False   # pin (E,C,D) dispatch to ("model",dp,None)
+
+    @property
+    def act_embed_tp(self) -> bool:
+        return self.act_mode == "embed_tp"
+
+
+def _leaf_spec(path: str, ndim: int, pol: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf.  ``path`` is '/'-joined."""
+    fs = pol.fsdp_axis if pol.fsdp else None
+    tp = pol.tp_axis
+    name = path.split("/")[-1]
+    stacked = path.startswith("blocks") or "blocks" in path
+    pre = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*(pre + dims))
+
+    if name in ("embed", "lm_head"):
+        return P(tp, fs)
+    if name == "patch_proj":
+        return P(None, tp)
+    if name in ("final_norm", "enc_final_norm"):
+        return P(None)
+    # ---- attention (AttnParams fields) ----
+    if name == "wq":
+        return spec(fs, tp, None)
+    if name in ("wk", "wv"):
+        return spec(fs, None, None)       # KV heads may be < TP; replicate
+    if name == "wo":
+        return spec(tp, None, fs)
+    if name == "bq":
+        return spec(tp, None)
+    if name in ("bk", "bv"):
+        return spec(None, None)
+    # ---- mlp ----
+    if name in ("w_gate", "w_up") and ndim == len(pre) + 2:
+        return spec(fs, tp)
+    if name == "w_down" and ndim == len(pre) + 2:
+        return spec(tp, fs)
+    # ---- moe (expert-stacked 3D) ----
+    if name == "router":
+        return spec(fs, None)
+    if name in ("w_gate", "w_up"):        # (E, D, F)
+        return spec(tp, fs, None)
+    if name == "w_down":                  # (E, F, D)
+        return spec(tp, None, fs)
+    # ---- ssm ----
+    if name in ("w_z", "w_x"):
+        return spec(fs, tp)
+    if name in ("w_b", "w_c", "w_dt"):
+        return spec(fs, None)
+    if name == "conv_x":
+        return spec(None, tp)
+    if name in ("conv_b", "conv_c"):
+        return spec(None, None)
+    if name == "conv_bias_x":
+        return spec(tp)
+    if name in ("conv_bias_b", "conv_bias_c"):
+        return spec(None)
+    if name in ("a_log", "d_skip", "dt_bias"):
+        return spec(tp)
+    if name == "w_out":
+        return spec(tp, fs)
+    if name == "norm_scale":
+        return spec(tp)
+    if name.startswith("norm"):
+        return spec(None)
+    # fallback: replicate
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params_shape: Any, pol: ShardingPolicy = ShardingPolicy()
+                 ) -> Any:
+    """PartitionSpec pytree matching an (abstract) param pytree."""
+    def one(path, leaf):
+        return _leaf_spec(_path_str(path), len(leaf.shape), pol)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_pspecs(opt_shape: Any, params_shape: Any,
+               pol: ShardingPolicy = ShardingPolicy()) -> Any:
+    """Optimizer state mirrors param sharding (m/v same shape as params);
+    scalar step replicated; Adafactor row/col stats replicated (small)."""
+    pspecs = param_pspecs(params_shape, pol)
+    # structural: AdamW m/v mirror the param tree -> reuse param specs;
+    # other optimizers' stats are O(sqrt(param)) and stay replicated.
+    from repro.optim import AdamWState
+    if isinstance(opt_shape, AdamWState):
+        return AdamWState(step=P(), m=pspecs, v=pspecs)
+    # adafactor / other: replicate stats (they are O(sqrt(param)) size)
+    return jax.tree.map(lambda l: P(*([None] * len(l.shape))), opt_shape)
+
+
+def train_state_pspecs(state_shape: Any,
+                       pol: ShardingPolicy = ShardingPolicy()) -> Any:
+    return {"params": param_pspecs(state_shape["params"], pol),
+            "opt": opt_pspecs(state_shape["opt"], state_shape["params"], pol),
+            "step": P()}
+
+
+def batch_pspecs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Batch dim over every non-model axis; everything else replicated."""
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        dims = (dp,) + (None,) * (len(leaf.shape) - 1)
+        return P(*dims)
+    return jax.tree.map(one, batch_shape)
+
+
+def decode_state_pspecs(state_shape: Any, mesh: Mesh, global_batch: int,
+                        pol: ShardingPolicy = ShardingPolicy()) -> Any:
+    """KV caches (nsb, B, T, KVH, hd); ssm states (nsb, B, H, P, N);
+    conv lookbacks (nsb, B, W-1, Ch); pos scalar."""
+    from repro.launch.mesh import dp_axes, dp_size
+    dp = dp_axes(mesh)
+    batch_shardable = global_batch >= dp_size(mesh) and global_batch > 1
+    bdim = dp if batch_shardable else None
+    # seq axis of caches: "model" when batch is sharded; every axis when
+    # batch-1 long-context (the only way to fit 512k slots)
+    seq_axes = pol.tp_axis if batch_shardable else tuple(dp) + (pol.tp_axis,)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if ps.endswith(("/k", "/v")):
+            return P(None, bdim, seq_axes if pol.seq_shard_decode else None,
+                     None, None)
+        if ps.endswith("/ssm"):
+            return P(None, bdim, pol.tp_axis, None, None)
+        if ps.endswith("/conv_x"):
+            return P(None, bdim, None, pol.tp_axis)
+        if ps.endswith("/conv_bc"):
+            return P(None, bdim, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def to_shardings(mesh: Mesh, pspec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------ activation context
+_ACT_CTX: dict = {"mesh": None, "dp": None, "tp": None,
+                  "act_mode": "embed_tp", "moe_constraint": False}
+
+
+def set_activation_sharding(mesh: Optional[Mesh], dp: Optional[Tuple[str, ...]],
+                            tp: Optional[str], act_mode: str = "embed_tp",
+                            moe_constraint: bool = False) -> None:
+    """Enable with_sharding_constraint hooks inside the model code.
+    Call with (None, None, None) to disable (single-device tests)."""
+    _ACT_CTX["mesh"] = mesh
+    _ACT_CTX["dp"] = dp
+    _ACT_CTX["tp"] = tp
+    _ACT_CTX["act_mode"] = act_mode
+    _ACT_CTX["moe_constraint"] = moe_constraint
+
+
+def shard_act_btd(x: jnp.ndarray) -> jnp.ndarray:
+    """Constraint for (B, S, D) residual-stream activations."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    mode = _ACT_CTX["act_mode"]
+    if mode == "seq_tp":
+        spec = P(_ACT_CTX["dp"], _ACT_CTX["tp"], None)
+    elif mode == "dp_only":
+        spec = P(_ACT_CTX["dp"], None, None)
+    else:
+        spec = P(_ACT_CTX["dp"], None, _ACT_CTX["tp"])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_act_logits_input(x: jnp.ndarray) -> jnp.ndarray:
+    """Pre-LM-head constraint: gather seq so the vocab matmul shards on V
+    (prevents XLA choosing a vocab all-gather under seq_tp)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or _ACT_CTX["act_mode"] != "seq_tp":
+        return x
+    spec = P(_ACT_CTX["dp"], None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_moe_dispatch(xe: jnp.ndarray) -> jnp.ndarray:
+    """Constraint for the (E, C, D) expert dispatch buffer."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or not _ACT_CTX["moe_constraint"]:
+        return xe
+    spec = P(_ACT_CTX["tp"], _ACT_CTX["dp"], None)
+    return jax.lax.with_sharding_constraint(xe, NamedSharding(mesh, spec))

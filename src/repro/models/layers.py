@@ -1,0 +1,178 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked,
+cache-aware), SwiGLU MLP.  Pure JAX; bf16 compute with f32 softmax/norm.
+
+Attention is *query-chunked*: logits for one (B, H, q_chunk, T) tile at a
+time via ``lax.scan``, so the (S, S) score matrix is never materialized —
+peak activation memory is O(S·q_chunk) per layer instead of O(S²).  GQA
+keeps K/V at ``num_kv_heads`` and broadcasts inside the einsum (XLA fuses
+the repeat; no materialized copy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5
+             ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (B, S) or (S,) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                    # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def _scores_softmax_ctx(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        mask: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,KVH,G,hd), k/v (B,T,KVH,hd), mask (B|1, Sq, T) -> ctx like q."""
+    scale = float(1.0 / np.sqrt(q.shape[-1]))
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return ctx.astype(q.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_positions: jnp.ndarray, kv_valid_len: Optional[jnp.ndarray],
+              *, causal: bool, q_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked GQA attention.
+
+    q (B, Sq, H, hd); k, v (B, T, KVH, hd); q_positions (Sq,) absolute
+    positions of the queries (for causal masking against cache slots);
+    kv_valid_len: scalar count of valid cache slots (None = all T).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q5 = q.reshape(b, sq, kvh, g, hd)
+    kv_pos = jnp.arange(t)
+
+    def mask_for(qpos):
+        m = jnp.ones((qpos.shape[0], t), bool)
+        if causal:
+            m &= qpos[:, None] >= kv_pos[None, :]
+        if kv_valid_len is not None:
+            m &= kv_pos[None, :] < kv_valid_len
+        return m[None]                              # (1, Sq_chunk, T)
+
+    if sq <= q_chunk:
+        return _scores_softmax_ctx(q5, k, v, mask_for(q_positions)
+                                   ).reshape(b, sq, h, hd)
+
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    nc = sq // q_chunk
+    qc = q5.reshape(b, nc, q_chunk, kvh, g, hd)
+    pc = q_positions.reshape(nc, q_chunk)
+
+    def step(_, inputs):
+        qi, pi = inputs
+        ctx = _scores_softmax_ctx(qi, k, v, mask_for(pi))
+        return None, ctx
+
+    _, ctx = jax.lax.scan(step, None, (jnp.moveaxis(qc, 1, 0), pc))
+    ctx = jnp.moveaxis(ctx, 0, 1).reshape(b, sq, kvh, g, hd)
+    return ctx.reshape(b, sq, h, hd)
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray          # (D, H, hd)
+    wk: jnp.ndarray          # (D, KVH, hd)
+    wv: jnp.ndarray          # (D, KVH, hd)
+    wo: jnp.ndarray          # (H, hd, D)
+    bq: Optional[jnp.ndarray] = None    # (H, hd) — qwen1.5 qkv bias
+    bk: Optional[jnp.ndarray] = None
+    bv: Optional[jnp.ndarray] = None
+
+
+def init_attn(key: jax.Array, d_model: int, heads: int, kv_heads: int,
+              head_dim: int, real_heads: int, *, bias: bool, dtype
+              ) -> AttnParams:
+    """``heads`` may exceed ``real_heads`` (TP padding): padded head slices
+    are zero so they contribute nothing through wo."""
+    ks = jax.random.split(key, 4)
+    scale_in = float(1.0 / np.sqrt(d_model))
+    scale_out = float(1.0 / np.sqrt(real_heads * head_dim))
+    wq = jax.random.normal(ks[0], (d_model, heads, head_dim), dtype) * scale_in
+    wo = jax.random.normal(ks[3], (heads, head_dim, d_model), dtype) * scale_out
+    if heads != real_heads:
+        padmask = (jnp.arange(heads) < real_heads).astype(dtype)
+        wq = wq * padmask[None, :, None]
+        wo = wo * padmask[:, None, None]
+    wk = jax.random.normal(ks[1], (d_model, kv_heads, head_dim), dtype) * scale_in
+    wv = jax.random.normal(ks[2], (d_model, kv_heads, head_dim), dtype) * scale_in
+    if bias:
+        return AttnParams(wq, wk, wv, wo,
+                          bq=jnp.zeros((heads, head_dim), dtype),
+                          bk=jnp.zeros((kv_heads, head_dim), dtype),
+                          bv=jnp.zeros((kv_heads, head_dim), dtype))
+    return AttnParams(wq, wk, wv, wo)
+
+
+def qkv_proj(p: AttnParams, x: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.bq is not None:
+        q = q + p.bq
+        k = k + p.bk
+        v = v + p.bv
+    return q, k, v
+
+
+def out_proj(p: AttnParams, ctx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", ctx, p.wo)
+
+
+class MlpParams(NamedTuple):
+    w_gate: jnp.ndarray      # (D, F)
+    w_up: jnp.ndarray        # (D, F)
+    w_down: jnp.ndarray      # (F, D)
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> MlpParams:
+    ks = jax.random.split(key, 3)
+    si, so = float(1.0 / np.sqrt(d_model)), float(1.0 / np.sqrt(d_ff))
+    return MlpParams(
+        w_gate=jax.random.normal(ks[0], (d_model, d_ff), dtype) * si,
+        w_up=jax.random.normal(ks[1], (d_model, d_ff), dtype) * si,
+        w_down=jax.random.normal(ks[2], (d_ff, d_model), dtype) * so)
+
+
+def mlp(p: MlpParams, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p.w_gate) * (x @ p.w_up)
+    return h @ p.w_down
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Write (B, Snew, KVH, hd) into cache (B, T, KVH, hd) at time `pos`."""
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, pos, 0, 0))

@@ -1,0 +1,439 @@
+"""Unified model: parameters, train forward, prefill, and decode for every
+assigned architecture family.
+
+Layer stacks are organized as **superblocks**: the smallest repeating
+pattern of layer kinds (1 for homogeneous stacks, 8 for jamba's
+[mamba,mamba,mamba,mamba,attn,mamba,mamba,mamba] × [mlp/moe] interleave).
+Parameters are stacked over superblocks and the stack is traversed with
+``lax.scan`` — HLO size stays O(period), not O(layers), which keeps
+compile times sane at 94 layers and lets remat checkpoint exactly one
+superblock.
+
+Decode state is a pytree of per-sub-layer stacked caches (KV for
+attention subs, (ssm, conv) for SSD subs, cross-KV for encoder-decoder).
+
+All dense compute is bf16 with f32 softmax/norm/router; loss in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+Caches = Dict[str, Any]
+
+
+# ============================================================ param building
+def _sub_kind(cfg: ModelConfig, j: int) -> str:
+    mix = "attn" if cfg.is_attn_layer(j) else "ssm"
+    if cfg.num_experts and cfg.is_moe_layer(j):
+        ff = "moe+mlp" if cfg.dense_residual else "moe"
+    elif cfg.d_ff > 0:
+        ff = "mlp"
+    else:
+        ff = "none"
+    return f"{mix}|{ff}"
+
+
+def _init_sub(key: jax.Array, cfg: ModelConfig, kind: str, tp: int) -> Params:
+    mix, ff = kind.split("|")
+    d, dt = cfg.d_model, cfg.pdtype
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((d,), dt)}
+    if mix == "attn":
+        p["attn"] = L.init_attn(
+            ks[0], d, cfg.padded_heads(tp), cfg.num_kv_heads, cfg.head_dim,
+            cfg.num_heads, bias=cfg.qkv_bias, dtype=dt)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(
+            ks[0], d, cfg.d_inner, cfg.ssm_state, cfg.padded_ssm_heads(tp),
+            cfg.ssm_heads, cfg.ssm_conv_width, dt)
+    if ff != "none":
+        p["norm2"] = jnp.ones((d,), dt)
+    if ff in ("moe", "moe+mlp"):
+        p["moe"] = moe_mod.init_moe(ks[1], d, cfg.num_experts,
+                                    cfg.expert_ff, dt)
+    if ff in ("mlp", "moe+mlp"):
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, dt)
+    return p
+
+
+def _init_cross_sub(key: jax.Array, cfg: ModelConfig, tp: int) -> Params:
+    """Cross-attention insert for encoder-decoder decoder layers."""
+    return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": L.init_attn(key, cfg.d_model, cfg.padded_heads(tp),
+                                cfg.num_kv_heads, cfg.head_dim,
+                                cfg.num_heads, bias=False, dtype=cfg.pdtype)}
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def padded_vocab(cfg: ModelConfig, tp: int) -> int:
+    """Vocab rounded up to the model-axis size (sharding divisibility);
+    padded logits are masked to -inf in every head computation."""
+    return ((cfg.vocab_size + tp - 1) // tp) * tp
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, tp: int = 1) -> Params:
+    """Full parameter pytree.  ``tp``: model-axis size for head/vocab
+    padding."""
+    keys = jax.random.split(key, 8)
+    d, dt = cfg.d_model, cfg.pdtype
+    v = padded_vocab(cfg, tp)
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (v, d), dt) * 0.02,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (v, d), dt) * 0.02
+
+    period = cfg.superblock_period()
+    nsb = cfg.num_layers // period
+    sub_kinds = [_sub_kind(cfg, j) for j in range(period)]
+    blocks = {}
+    for j, kind in enumerate(sub_kinds):
+        kj = jax.random.fold_in(keys[2], j)
+        subs = [_init_sub(jax.random.fold_in(kj, i), cfg, kind, tp)
+                for i in range(nsb)]
+        blocks[f"sub{j}"] = _stack(subs)
+        if cfg.encoder_layers:   # decoder layers get cross-attention
+            kc = jax.random.fold_in(keys[3], j)
+            blocks[f"cross{j}"] = _stack(
+                [_init_cross_sub(jax.random.fold_in(kc, i), cfg, tp)
+                 for i in range(nsb)])
+    params["blocks"] = blocks
+
+    if cfg.encoder_layers:
+        enc = [_init_sub(jax.random.fold_in(keys[4], i), cfg, "attn|mlp", tp)
+               for i in range(cfg.encoder_layers)]
+        params["enc_blocks"] = {"sub0": _stack(enc)}
+        params["enc_final_norm"] = jnp.ones((d,), dt)
+    if cfg.frontend == "vision":
+        # stub projection for precomputed patch embeddings
+        params["patch_proj"] = jax.random.normal(keys[5], (d, d), dt) \
+            * float(1.0 / np.sqrt(d))
+    return params
+
+
+# ========================================================== block application
+def _apply_ff(cfg: ModelConfig, kind: str, p: Params, x: jnp.ndarray,
+              aux: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    _, ff = kind.split("|")
+    if ff == "none":
+        return x
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    delta = 0.0
+    if ff in ("moe", "moe+mlp"):
+        mo, moe_aux = moe_mod.moe_apply(p["moe"], h, top_k=cfg.moe_top_k,
+                                        capacity_factor=cfg.capacity_factor)
+        aux["lb_loss"] = aux.get("lb_loss", 0.0) + moe_aux.load_balance_loss
+        aux["z_loss"] = aux.get("z_loss", 0.0) + moe_aux.z_loss
+        delta = delta + mo
+    if ff in ("mlp", "moe+mlp"):
+        delta = delta + L.mlp(p["mlp"], h)
+    return x + delta
+
+
+def _ssm_heads_of(p: Params) -> int:
+    """Padded SSD head count, read from the param shapes."""
+    return p["ssm"].a_log.shape[-1]
+
+
+def _apply_sub_train2(cfg: ModelConfig, kind: str, p: Params,
+                      x: jnp.ndarray, positions: jnp.ndarray,
+                      aux: Dict[str, jnp.ndarray], q_chunk: int
+                      ) -> jnp.ndarray:
+    mix, _ = kind.split("|")
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mix == "attn":
+        q, k, v = L.qkv_proj(p["attn"], h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ctx = L.attention(q, k, v, positions, None, causal=True,
+                          q_chunk=q_chunk)
+        x = x + L.out_proj(p["attn"], ctx)
+    else:
+        out, _ = ssm_mod.ssm_forward(
+            p["ssm"], h, heads=_ssm_heads_of(p), n_state=cfg.ssm_state,
+            chunk=min(cfg.ssm_chunk, x.shape[1]))
+        x = x + out
+    return _apply_ff(cfg, kind, p, x, aux)
+
+
+def _apply_cross(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 enc_k: jnp.ndarray, enc_v: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention against precomputed encoder K/V."""
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"].wq)
+    ctx = L.attention(q, enc_k, enc_v,
+                      jnp.zeros((x.shape[1],), jnp.int32), None,
+                      causal=False, q_chunk=1024)
+    return x + L.out_proj(p["attn"], ctx)
+
+
+def _cross_kv(p: Params, enc_out: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["attn"].wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["attn"].wv)
+    return k, v
+
+
+# ================================================================== forward
+def _remat_policy(name: str):
+    if name == "dots":
+        # save matmul outputs (they are small per-device shards post-TP);
+        # avoids backward re-gathers of weights/activations — §Perf
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_blocks_train(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                       positions: jnp.ndarray, q_chunk: int,
+                       enc_out: Optional[jnp.ndarray] = None,
+                       remat: bool = True, remat_policy: str = "nothing"
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    period = cfg.superblock_period()
+    sub_kinds = [_sub_kind(cfg, j) for j in range(period)]
+    blocks = params["blocks"]
+
+    def superblock(x, slc):
+        from repro.launch.sharding import shard_act_btd
+        aux = {"lb_loss": jnp.zeros((), jnp.float32),
+               "z_loss": jnp.zeros((), jnp.float32)}
+        for j, kind in enumerate(sub_kinds):
+            x = shard_act_btd(x)      # boundary constraint (no-op w/o mesh)
+            x = _apply_sub_train2(cfg, kind, slc[f"sub{j}"], x, positions,
+                                  aux, q_chunk)
+            if enc_out is not None:
+                x = _apply_cross(cfg, slc[f"cross{j}"], x,
+                                 *_cross_kv(slc[f"cross{j}"], enc_out))
+        return shard_act_btd(x), (aux["lb_loss"], aux["z_loss"])
+
+    if remat:
+        superblock = jax.checkpoint(
+            superblock, policy=_remat_policy(remat_policy))
+
+    def step(x, slc):
+        return superblock(x, slc)
+
+    x, (lb, zl) = jax.lax.scan(step, x, blocks)
+    return x, {"lb_loss": jnp.sum(lb), "z_loss": jnp.sum(zl)}
+
+
+def encode(cfg: ModelConfig, params: Params, src_embeds: jnp.ndarray,
+           remat: bool = True) -> jnp.ndarray:
+    """Encoder stack (bidirectional attention) over stub frame embeddings."""
+    x = src_embeds.astype(cfg.cdtype)
+    positions = jnp.arange(x.shape[1])
+
+    def block(x, slc):
+        aux: Dict[str, jnp.ndarray] = {}
+        h = L.rms_norm(x, slc["norm1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(slc["attn"], h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ctx = L.attention(q, k, v, positions, None, causal=False,
+                          q_chunk=4096)
+        x = x + L.out_proj(slc["attn"], ctx)
+        x = _apply_ff(cfg, "attn|mlp", slc, x, aux)
+        return x, None
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"]["sub0"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward_train(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+                  q_chunk: int = 1024, remat: bool = True,
+                  remat_policy: str = "nothing"
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Token (+ modality-stub) inputs -> mean masked cross-entropy loss."""
+    from repro.launch.sharding import shard_act_btd
+    tokens = batch["tokens"]
+    x = shard_act_btd(params["embed"][tokens].astype(cfg.cdtype))  # (B,S,D)
+    offset = 0
+    if cfg.frontend == "vision":
+        pe = batch["patch_embeds"].astype(cfg.cdtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        offset = pe.shape[1]
+    positions = jnp.arange(x.shape[1])
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(cfg, params, batch["src_embeds"], remat=remat)
+
+    x, aux = _scan_blocks_train(cfg, params, x, positions, q_chunk,
+                                enc_out=enc_out, remat=remat,
+                                remat_policy=remat_policy)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if offset:
+        x = x[:, offset:, :]
+    from repro.launch.sharding import shard_act_logits_input
+    x = shard_act_logits_input(x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)            # bf16
+    logits = logits.astype(jnp.float32)
+    if head.shape[0] != cfg.vocab_size:                    # mask vocab pad
+        pad_mask = jnp.arange(head.shape[0]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+
+    labels = batch["labels"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.aux_loss_weight * aux.get("lb_loss", 0.0) \
+        + cfg.router_z_loss * aux.get("z_loss", 0.0)
+    metrics = {"loss": loss, "lb_loss": aux.get("lb_loss", 0.0),
+               "z_loss": aux.get("z_loss", 0.0)}
+    return total, metrics
+
+
+# ================================================================= decoding
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      tp: int = 1, dtype=None) -> Caches:
+    """Allocate per-sub-layer caches, stacked over superblocks."""
+    dt = dtype or cfg.pdtype
+    period = cfg.superblock_period()
+    nsb = cfg.num_layers // period
+    state: Caches = {"pos": jnp.zeros((), jnp.int32)}
+    for j in range(period):
+        kind = _sub_kind(cfg, j)
+        mix, _ = kind.split("|")
+        if mix == "attn":
+            shape = (nsb, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+            state[f"sub{j}"] = {"k": jnp.zeros(shape, dt),
+                                "v": jnp.zeros(shape, dt)}
+        else:
+            h = cfg.padded_ssm_heads(tp)
+            hd = cfg.d_inner // cfg.ssm_heads
+            state[f"sub{j}"] = {
+                "ssm": jnp.zeros((nsb, batch, h, hd, cfg.ssm_state),
+                                 jnp.float32),
+                "conv_x": jnp.zeros(
+                    (nsb, batch, cfg.ssm_conv_width - 1, h * hd), dt),
+                "conv_bc": jnp.zeros(
+                    (nsb, batch, cfg.ssm_conv_width - 1, 2 * cfg.ssm_state),
+                    dt)}
+        if cfg.encoder_layers:
+            shape = (nsb, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+            state[f"cross{j}"] = {"k": jnp.zeros(shape, dt),
+                                  "v": jnp.zeros(shape, dt)}
+    return state
+
+
+def _apply_sub_step(cfg: ModelConfig, kind: str, p: Params, x: jnp.ndarray,
+                    cache: Caches, pos: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Caches]:
+    """One sub-layer on (B, S_new, D) with cache read+write (S_new=1 decode,
+    or the full prompt during prefill)."""
+    mix, _ = kind.split("|")
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    s_new = x.shape[1]
+    if mix == "attn":
+        q, k, v = L.qkv_proj(p["attn"], h)
+        positions = pos + jnp.arange(s_new)
+        q = L.apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+        k_cache = L.update_cache(cache["k"], k, pos)
+        v_cache = L.update_cache(cache["v"], v, pos)
+        ctx = L.attention(q, k_cache, v_cache, positions, pos + s_new,
+                          causal=True, q_chunk=1024)
+        x = x + L.out_proj(p["attn"], ctx)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        st = ssm_mod.SsmState(ssm=cache["ssm"], conv_x=cache["conv_x"],
+                              conv_bc=cache["conv_bc"])
+        if s_new == 1:
+            out, st = ssm_mod.ssm_decode_step(
+                p["ssm"], h, st, heads=_ssm_heads_of(p),
+                n_state=cfg.ssm_state)
+        else:
+            out, st = ssm_mod.ssm_forward(
+                p["ssm"], h, heads=_ssm_heads_of(p), n_state=cfg.ssm_state,
+                chunk=min(cfg.ssm_chunk, s_new), state=st)
+        x = x + out
+        new_cache = {"ssm": st.ssm, "conv_x": st.conv_x,
+                     "conv_bc": st.conv_bc}
+    aux: Dict[str, jnp.ndarray] = {}
+    return _apply_ff(cfg, kind, p, x, aux), new_cache
+
+
+def forward_step(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                 state: Caches,
+                 prefix_embeds: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, Caches]:
+    """Cache-carrying forward (prefill: tokens (B, S); decode: (B, 1)).
+    Returns (logits for the final position (B, V), new state)."""
+    period = cfg.superblock_period()
+    sub_kinds = [_sub_kind(cfg, j) for j in range(period)]
+    pos = state["pos"]
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(cfg.cdtype)
+        if cfg.frontend == "vision":
+            pe = pe @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+
+    block_caches = {k: v for k, v in state.items() if k != "pos"}
+
+    def superblock(x, slc_and_cache):
+        slc, cache = slc_and_cache
+        new_cache = {}
+        for j, kind in enumerate(sub_kinds):
+            x, nc = _apply_sub_step(cfg, kind, slc[f"sub{j}"], x,
+                                    cache[f"sub{j}"], pos)
+            new_cache[f"sub{j}"] = nc
+            if cfg.encoder_layers:   # cross K/V prefilled by fill_cross_caches
+                ck = cache[f"cross{j}"]
+                x = _apply_cross(cfg, slc[f"cross{j}"], x, ck["k"], ck["v"])
+                new_cache[f"cross{j}"] = ck
+        return x, new_cache
+
+    def step(x, inp):
+        return superblock(x, inp)
+
+    x, new_caches = jax.lax.scan(step, x, (params["blocks"], block_caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, -1, :], head).astype(jnp.float32)
+    if head.shape[0] != cfg.vocab_size:                    # mask vocab pad
+        pad_mask = jnp.arange(head.shape[0]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    new_state: Caches = dict(new_caches)
+    new_state["pos"] = pos + x.shape[1]
+    return logits, new_state
+
+
+def fill_cross_caches(cfg: ModelConfig, params: Params, state: Caches,
+                      enc_out: jnp.ndarray) -> Caches:
+    """Precompute encoder K/V for every decoder layer (encdec prefill)."""
+    period = cfg.superblock_period()
+    new_state = dict(state)
+    for j in range(period):
+        cp = params["blocks"][f"cross{j}"]
+        k, v = jax.vmap(lambda p: _cross_kv(p, enc_out),
+                        in_axes=0)(cp)     # stacked over superblocks
+        slen = k.shape[2]
+        ck = dict(new_state[f"cross{j}"])
+        ck["k"] = jax.lax.dynamic_update_slice(
+            ck["k"], k.astype(ck["k"].dtype), (0, 0, 0, 0, 0))
+        ck["v"] = jax.lax.dynamic_update_slice(
+            ck["v"], v.astype(ck["v"].dtype), (0, 0, 0, 0, 0))
+        new_state[f"cross{j}"] = ck
+    return new_state

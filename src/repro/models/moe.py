@@ -1,0 +1,132 @@
+"""Mixture-of-Experts: token-choice top-k router with capacity, sort-based
+dispatch (static shapes, TPU-native).
+
+GShard's one-hot dispatch einsum materializes an (N, E, C) tensor — at
+65k tokens × 128 experts that is tens of GB.  We instead use the
+sort-based formulation: flatten the N·K (token, expert, gate) assignments,
+sort by expert id (TPU bitonic sort), compute each assignment's position
+within its expert's run, drop those ≥ capacity, and scatter token ids
+into an (E·C,) slot table.  Expert FFN runs as one batched einsum over
+(E, C, D); results scatter-add back weighted by the gates.
+
+Aux losses follow Switch/ST-MoE: load-balance loss (mean fraction ×
+mean router prob per expert) and router z-loss.
+
+Sharding: expert dim E maps to the "model" mesh axis (EP); the gather
+into (E, C, D) and the scatter back are where GSPMD inserts the
+all-to-all-equivalent collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MoeParams(NamedTuple):
+    router: jnp.ndarray      # (D, E)
+    w_gate: jnp.ndarray      # (E, D, F)
+    w_up: jnp.ndarray        # (E, D, F)
+    w_down: jnp.ndarray      # (E, F, D)
+
+
+def init_moe(key: jax.Array, d_model: int, num_experts: int, expert_ff: int,
+             dtype) -> MoeParams:
+    ks = jax.random.split(key, 4)
+    si = float(1.0 / np.sqrt(d_model))
+    so = float(1.0 / np.sqrt(expert_ff))
+    return MoeParams(
+        router=jax.random.normal(ks[0], (d_model, num_experts),
+                                 jnp.float32) * si,
+        w_gate=jax.random.normal(ks[1], (num_experts, d_model, expert_ff),
+                                 dtype) * si,
+        w_up=jax.random.normal(ks[2], (num_experts, d_model, expert_ff),
+                               dtype) * si,
+        w_down=jax.random.normal(ks[3], (num_experts, expert_ff, d_model),
+                                 dtype) * so)
+
+
+def capacity(num_tokens: int, num_experts: int, top_k: int,
+             factor: float) -> int:
+    c = int(np.ceil(num_tokens * top_k * factor / num_experts))
+    return max(8, ((c + 7) // 8) * 8)       # pad to VPU sublane multiple
+
+
+class MoeAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    z_loss: jnp.ndarray
+    dropped_frac: jnp.ndarray   # fraction of assignments over capacity
+
+
+def moe_apply(p: MoeParams, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, MoeAux]:
+    """x (B, S, D) -> (B, S, D), aux losses.  Static shapes throughout."""
+    b, s, d = x.shape
+    n = b * s
+    e = p.router.shape[1]
+    c = capacity(n, e, top_k, capacity_factor)
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ p.router)          # (N, E) f32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)   # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- sort-based dispatch --------------------------------------------
+    flat_expert = expert_ids.reshape(-1)                  # (N*K,)
+    flat_token = jnp.repeat(jnp.arange(n, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    # stable sort by expert keeps router order for fair capacity dropping
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within each expert's run
+    same = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            (se[1:] == se[:-1]).astype(jnp.int32)])
+    idx = jnp.arange(n * top_k, dtype=jnp.int32)
+    run_start = jnp.where(same == 0, idx, 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    pos_in_expert = idx - run_start
+    keep = pos_in_expert < c
+    slot = se.astype(jnp.int32) * c + pos_in_expert       # (N*K,) in [0, E*C)
+    slot = jnp.where(keep, slot, e * c)                   # overflow slot
+
+    # slot -> token gather table ((E*C)+1 with trash slot)
+    slot_token = jnp.zeros((e * c + 1,), jnp.int32).at[slot].set(st,
+                                                                 mode="drop")
+    slot_filled = jnp.zeros((e * c + 1,), bool).at[slot].set(keep,
+                                                             mode="drop")
+    gather_idx = slot_token[:e * c]
+    filled = slot_filled[:e * c]
+
+    xe = jnp.where(filled[:, None], xf[gather_idx], 0.0)  # (E*C, D)
+    xe = xe.reshape(e, c, d)
+    from repro.launch.sharding import shard_moe_dispatch
+    xe = shard_moe_dispatch(xe)                           # EP constraint
+
+    # ---- expert FFN (batched over E) ------------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p.w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", xe, p.w_up)
+    ye = jnp.einsum("ecf,efd->ecd", h, p.w_down)          # (E, C, D)
+
+    # ---- combine: scatter-add back, gate-weighted ------------------------
+    # per-slot gate (scattered alongside the token ids)
+    slot_gate = jnp.zeros((e * c + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sg, 0.0), mode="drop")[:e * c]
+    ye_flat = ye.reshape(e * c, d)
+    gated = ye_flat * slot_gate[:, None].astype(ye_flat.dtype)
+    out = jnp.zeros((n, d), ye_flat.dtype).at[gather_idx].add(
+        jnp.where(filled[:, None], gated, 0.0), mode="drop")
+
+    # ---- aux losses -------------------------------------------------------
+    # load-balance (Switch eq. 4): E * sum_e f_e * P_e
+    assign_onehot = jax.nn.one_hot(expert_ids[:, 0], e)   # top-1 fraction
+    f = jnp.mean(assign_onehot, axis=0)
+    pmean = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f * pmean)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.sum(keep) / (n * top_k)
+    aux = MoeAux(load_balance_loss=lb, z_loss=z, dropped_frac=dropped)
+    return out.reshape(b, s, d).astype(x.dtype), aux

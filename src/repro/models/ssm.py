@@ -1,0 +1,248 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked matmul form.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): the
+selective state-space recurrence
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t,      y_t = C_t h_t + D x_t
+
+evaluated in *chunks*: within a chunk the recurrence unrolls into a
+masked (C·Bᵀ ∘ decay) attention-like matmul (MXU-friendly); across chunks
+a small (H, P, N) state carries via ``lax.scan``.  Scalar-identity A per
+head (the Mamba2 restriction) makes all decays rank-1.
+
+Decode is the O(1)-per-token recurrent form: one state update per step —
+this is why the `long_500k` shape runs for SSM/hybrid archs only.
+
+Projection weights are stored per-component (z, x, B, C, dt) rather than
+as one fused in_proj so each can carry its own PartitionSpec: the d_inner
+lanes (z/x) shard over the "model" axis, the small B/C/dt lanes stay
+replicated — a fused layout would split mid-component (DESIGN.md §6).
+Heads H = d_inner / headdim, TP-padded (padded lanes zeroed, outputs
+exact).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SsmParams(NamedTuple):
+    w_z: jnp.ndarray         # (D, d_in_pad) gate branch
+    w_x: jnp.ndarray         # (D, d_in_pad) ssm input branch
+    w_b: jnp.ndarray         # (D, N)
+    w_c: jnp.ndarray         # (D, N)
+    w_dt: jnp.ndarray        # (D, H)
+    conv_x: jnp.ndarray      # (W, d_in_pad) depthwise causal conv
+    conv_b: jnp.ndarray      # (W, N)
+    conv_c: jnp.ndarray      # (W, N)
+    conv_bias_x: jnp.ndarray  # (d_in_pad,)
+    conv_bias_b: jnp.ndarray  # (N,)
+    conv_bias_c: jnp.ndarray  # (N,)
+    a_log: jnp.ndarray       # (H,)
+    d_skip: jnp.ndarray      # (H,)
+    dt_bias: jnp.ndarray     # (H,)
+    w_out: jnp.ndarray       # (d_in_pad, D)
+    norm_scale: jnp.ndarray  # (d_in_pad,) gated RMSNorm before out_proj
+
+
+class SsmState(NamedTuple):
+    """Decode-time recurrent state."""
+    ssm: jnp.ndarray         # (B, H, P, N) f32
+    conv_x: jnp.ndarray      # (B, W-1, d_in_pad) conv lookback
+    conv_bc: jnp.ndarray     # (B, W-1, 2*N)
+
+
+def init_ssm(key: jax.Array, d_model: int, d_inner: int, n_state: int,
+             heads: int, real_heads: int, conv_width: int, dtype
+             ) -> SsmParams:
+    """``heads`` may be TP-padded above ``real_heads`` (zeroed lanes)."""
+    ks = jax.random.split(key, 8)
+    headdim = d_inner // real_heads
+    d_in_pad = heads * headdim
+    si = float(1.0 / np.sqrt(d_model))
+    w_z = jax.random.normal(ks[0], (d_model, d_in_pad), dtype) * si
+    w_x = jax.random.normal(ks[1], (d_model, d_in_pad), dtype) * si
+    w_dt = jax.random.normal(ks[2], (d_model, heads), dtype) * si
+    if heads != real_heads:
+        lane = (jnp.arange(d_in_pad) < real_heads * headdim).astype(dtype)
+        w_z = w_z * lane[None, :]
+        w_x = w_x * lane[None, :]
+        hmask = (jnp.arange(heads) < real_heads).astype(dtype)
+        w_dt = w_dt * hmask[None, :]
+    a0 = jnp.log(jnp.clip(
+        1.0 + jnp.arange(heads, dtype=jnp.float32), 1.0, 16.0))
+    return SsmParams(
+        w_z=w_z, w_x=w_x,
+        w_b=jax.random.normal(ks[3], (d_model, n_state), dtype) * si,
+        w_c=jax.random.normal(ks[4], (d_model, n_state), dtype) * si,
+        w_dt=w_dt,
+        conv_x=jax.random.normal(ks[5], (conv_width, d_in_pad), dtype) * 0.1,
+        conv_b=jax.random.normal(ks[6], (conv_width, n_state), dtype) * 0.1,
+        conv_c=jax.random.normal(ks[7], (conv_width, n_state), dtype) * 0.1,
+        conv_bias_x=jnp.zeros((d_in_pad,), dtype),
+        conv_bias_b=jnp.zeros((n_state,), dtype),
+        conv_bias_c=jnp.zeros((n_state,), dtype),
+        a_log=a0,                               # A = -exp(a_log) < 0
+        d_skip=jnp.ones((heads,), jnp.float32),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        w_out=jax.random.normal(ks[2], (d_in_pad, d_model), dtype)
+        * float(1.0 / np.sqrt(d_inner)),
+        norm_scale=jnp.ones((d_in_pad,), dtype))
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) per-step log decays -> (..., Q, Q) lower-tri cumulative sums:
+    out[t, s] = sum_{r=s+1..t} log_a_r  (the decay from step s to t)."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # (…, t, s)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+             init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    xh (B, S, H, P), dt (B, S, H) positive, b/c (B, S, N), a_log (H,).
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).  All f32 inside.
+    """
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xf = xh.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    a = -jnp.exp(a_log.astype(jnp.float32))           # (H,) negative
+    log_decay = dtf * a[None, None, None, :]          # (B, nc, Q, H)
+    xdt = xf * dtf[..., None]                         # Δ·x
+
+    # intra-chunk (diagonal blocks): y[t] += Σ_s≤t C_t·B_s exp(Σ_{s<r≤t}) x_s
+    seg = _segsum(jnp.moveaxis(log_decay, -1, -2))    # (B, nc, H, Q, Q)
+    decay_mat = jnp.exp(seg)
+    cb = jnp.einsum("bgtn,bgsn->bgts", cf, bf)        # (B, nc, Q, Q)
+    y_diag = jnp.einsum("bgts,bghts,bgshp->bgthp",
+                        cb, decay_mat, xdt)
+
+    # chunk-final states: S_g = Σ_s exp(Σ_{s<r≤Q}) B_s ⊗ (Δx)_s
+    cum = jnp.cumsum(log_decay, axis=2)               # (B, nc, Q, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B, nc, Q, H)
+    states = jnp.einsum("bgsn,bgsh,bgshp->bghpn", bf, decay_to_end, xdt)
+
+    # inter-chunk recurrence over the nc chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B, nc, H)
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                              # emit state BEFORE chunk
+
+    final, prior = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prior = jnp.moveaxis(prior, 0, 1)                  # (B, nc, H, P, N)
+
+    # off-diagonal: y[t] += C_t exp(Σ_{0<r≤t}) S_prior
+    in_decay = jnp.exp(cum)                            # (B, nc, Q, H)
+    y_off = jnp.einsum("bgtn,bgth,bghpn->bgthp", cf, in_decay, prior)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def _dw_conv(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+             lookback: Optional[jnp.ndarray]
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d + silu.  x (B, S, Ch), w (W, Ch)."""
+    width = w.shape[0]
+    if lookback is None:
+        lookback = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([lookback, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    new_lb = xp[:, -(width - 1):, :] if width > 1 else lookback
+    return jax.nn.silu(out + bias[None, None, :]), new_lb
+
+
+def ssm_forward(p: SsmParams, x: jnp.ndarray, *, heads: int, n_state: int,
+                chunk: int, state: Optional[SsmState] = None
+                ) -> Tuple[jnp.ndarray, SsmState]:
+    """Full Mamba2 block (train/prefill).  x (B, S, D)."""
+    z = x @ p.w_z                                     # (B, S, d_in_pad)
+    xr = x @ p.w_x
+    br = x @ p.w_b
+    cr = x @ p.w_c
+    dt_raw = x @ p.w_dt                               # (B, S, H)
+    lb_x = None if state is None else state.conv_x
+    lb_bc = None if state is None else state.conv_bc
+    xh, new_lb_x = _dw_conv(xr, p.conv_x, p.conv_bias_x, lb_x)
+    bc = jnp.concatenate([br, cr], axis=-1)
+    w_bc = jnp.concatenate([p.conv_b, p.conv_c], axis=-1)
+    bias_bc = jnp.concatenate([p.conv_bias_b, p.conv_bias_c])
+    bc_out, new_lb_bc = _dw_conv(bc, w_bc, bias_bc, lb_bc)
+    b = bc_out[..., :n_state]
+    c = bc_out[..., n_state:]
+    d_in_pad = z.shape[-1]
+    headdim = d_in_pad // heads
+    xh = xh.reshape(*xh.shape[:-1], heads, headdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p.dt_bias[None, None, :])
+    y, final = ssd_scan(xh, dt, p.a_log, b, c, chunk,
+                        None if state is None else state.ssm)
+    y = y + xh.astype(jnp.float32) * p.d_skip[None, None, :, None]
+    y = y.reshape(*y.shape[:-2], d_in_pad).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p.norm_scale)
+    out = y @ p.w_out
+    return out, SsmState(ssm=final, conv_x=new_lb_x, conv_bc=new_lb_bc)
+
+
+def ssm_decode_step(p: SsmParams, x: jnp.ndarray, state: SsmState,
+                    *, heads: int, n_state: int
+                    ) -> Tuple[jnp.ndarray, SsmState]:
+    """O(1) single-token recurrence.  x (B, 1, D)."""
+    z = x @ p.w_z
+    xr = x @ p.w_x
+    bc = jnp.concatenate([x @ p.w_b, x @ p.w_c], axis=-1)
+    dt_raw = x @ p.w_dt
+    width = p.conv_x.shape[0]
+
+    def one_step_conv(xin, lb, w, bias):
+        xp = jnp.concatenate([lb, xin], axis=1)       # (B, W, Ch)
+        out = sum(xp[:, i:i + 1, :] * w[i][None, None, :]
+                  for i in range(width))
+        return jax.nn.silu(out + bias[None, None, :]), xp[:, 1:, :]
+
+    xh, new_lb_x = one_step_conv(xr, state.conv_x, p.conv_x, p.conv_bias_x)
+    w_bc = jnp.concatenate([p.conv_b, p.conv_c], axis=-1)
+    bias_bc = jnp.concatenate([p.conv_bias_b, p.conv_bias_c])
+    bc_out, new_lb_bc = one_step_conv(bc, state.conv_bc, w_bc, bias_bc)
+    b = bc_out[:, 0, :n_state]
+    c = bc_out[:, 0, n_state:]
+    d_in_pad = z.shape[-1]
+    headdim = d_in_pad // heads
+    xh = xh.reshape(xh.shape[0], heads, headdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32)
+                         + p.dt_bias[None, :])        # (B, H)
+    a = -jnp.exp(p.a_log.astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                  # (B, H)
+    bf = b.astype(jnp.float32)                        # (B, N)
+    cf = c.astype(jnp.float32)
+    new_state = state.ssm * decay[:, :, None, None] + \
+        jnp.einsum("bhp,bn,bh->bhpn", xh, bf, dt)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cf)
+    y = y + xh * p.d_skip[None, :, None]
+    y = y.reshape(y.shape[0], 1, d_in_pad).astype(x.dtype)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p.norm_scale)
+    return y @ p.w_out, SsmState(ssm=new_state, conv_x=new_lb_x,
+                                 conv_bc=new_lb_bc)

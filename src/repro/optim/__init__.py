@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.adafactor import (AdafactorConfig, AdafactorState,
+                                   adafactor_init, adafactor_update)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.sketch_compress import (SketchCompressConfig,
+                                         SketchCompressState,
+                                         sketch_compress_init,
+                                         compress_and_reduce)

@@ -1,0 +1,97 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+For ≥2-D params the v statistics are stored as row/col vectors instead of
+a full matrix — the optimizer state for a 100B model drops from 800 GB to
+~param size, which is what makes the ≥100B assigned archs trainable on
+the briefed 16 GB/chip budget (DESIGN.md §6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8          # t^-decay second-moment decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    min_dim_size_to_factor: int = 128
+    weight_decay: float = 0.0
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any      # row stats (or full v for small/1-D params)
+    vc: Any      # col stats (or None sentinel zeros)
+    factored: Any   # static bool pytree mirrored as arrays
+
+
+def _should_factor(shape, min_size) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def adafactor_init(params: Any, cfg: AdafactorConfig = AdafactorConfig()
+                   ) -> AdafactorState:
+    def vr_init(p):
+        if _should_factor(p.shape, cfg.min_dim_size_to_factor):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _should_factor(p.shape, cfg.min_dim_size_to_factor):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+        factored=jax.tree.map(
+            lambda p: _should_factor(p.shape, cfg.min_dim_size_to_factor),
+            params))
+
+
+def adafactor_update(grads: Any, state: AdafactorState, params: Any,
+                     cfg: AdafactorConfig,
+                     lr: Optional[jnp.ndarray] = None
+                     ) -> Tuple[Any, AdafactorState]:
+    lr = cfg.lr if lr is None else lr
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(p, g, vr, vc, factored):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps
+        if factored:
+            vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(vr2, axis=-1, keepdims=True)
+            u = gf / (jnp.sqrt(vr2 / row_mean)[..., None]
+                      * jnp.sqrt(vc2)[..., None, :])
+        else:
+            vr2 = beta2 * vr + (1 - beta2) * g2
+            vc2 = vc
+            u = gf / jnp.sqrt(vr2)
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * u \
+            - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), vr2, vc2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_f = treedef.flatten_up_to(state.factored)
+    out = [upd(p, g, vr, vc, f) for p, g, vr, vc, f
+           in zip(flat_p, flat_g, flat_vr, flat_vc, flat_f)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AdafactorState(step=step,
+                           vr=treedef.unflatten([o[1] for o in out]),
+                           vc=treedef.unflatten([o[2] for o in out]),
+                           factored=state.factored))

@@ -1,0 +1,3 @@
+from repro.train.steps import (TrainStepConfig, make_train_step,
+                               make_prefill_step, make_decode_step,
+                               make_batch_specs, make_decode_specs)

@@ -1,0 +1,120 @@
+"""Training callbacks — including the paper's pipeline as a *live monitor*.
+
+``ActivationSketcher`` runs Sketch-and-Scale over the model's hidden
+states during training: each step, a batch of residual-stream vectors is
+random-projected to D ≤ 8 dims, quantized on a fixed grid, and streamed
+into a per-process Count Sketch.  At report time the heavy hitters (the
+densest cells of representation space, aggregated over EVERY token the
+model has seen since the last report) come out, optionally UMAP-embedded.
+Because the sketch is linear, multi-host runs psum-merge their sketches —
+full-corpus representation maps with O(R·C) memory and traffic, exactly
+the paper's pipeline with "geo-distributed edge nodes" = training workers.
+
+For MoE archs the same machinery over router logits detects expert-space
+density collapse: HH mass concentrating into few cells = routing collapse.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heavy_hitters as hh_mod
+from repro.core import quantize, sketch as sketch_mod
+from repro.core.quantize import GridSpec
+
+
+@dataclasses.dataclass
+class ActivationSketcher:
+    proj_dims: int = 8
+    bins: int = 16
+    rows: int = 8
+    log2_cols: int = 14
+    top_k: int = 256
+    seed: int = 0
+    box: float = 4.0            # grid half-width in projected units
+
+    def __post_init__(self):
+        self._sk = sketch_mod.init(jax.random.key(self.seed),
+                                   self.rows, self.log2_cols)
+        self._proj = None
+        self._grid = GridSpec(
+            dims=self.proj_dims, bins=self.bins,
+            lo=tuple([-self.box] * self.proj_dims),
+            hi=tuple([self.box] * self.proj_dims))
+        self._keys: List[np.ndarray] = []
+        self.tokens_seen = 0
+
+        @jax.jit
+        def _update(sk, proj, acts):
+            flat = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+            # normalize scale so the fixed grid stays meaningful
+            flat = flat / (jnp.linalg.norm(flat, axis=1, keepdims=True)
+                           / np.sqrt(flat.shape[1]) + 1e-6)
+            z = flat @ proj                               # (N, proj_dims)
+            khi, klo = quantize.points_to_keys(self._grid, z)
+            return sketch_mod.update_sorted(sk, khi, klo), khi, klo
+        self._update = _update
+
+    def observe(self, acts: jnp.ndarray) -> None:
+        """acts: (..., d_model) hidden states from the current step."""
+        d = acts.shape[-1]
+        if self._proj is None:
+            self._proj = jax.random.normal(
+                jax.random.key(self.seed + 1), (d, self.proj_dims),
+                jnp.float32) / np.sqrt(d)
+        self._sk, khi, klo = self._update(self._sk, self._proj, acts)
+        # keep a bounded reservoir of keys as HH identity candidates
+        n = khi.shape[0]
+        take = min(n, 4096)
+        self._keys.append(np.stack([np.asarray(khi[:take]),
+                                    np.asarray(klo[:take])], 1))
+        if len(self._keys) > 64:
+            self._keys = self._keys[-64:]
+        self.tokens_seen += int(np.prod(acts.shape[:-1]))
+
+    def report(self) -> Dict[str, Any]:
+        """Extract heavy hitters of representation space."""
+        if not self._keys:
+            return {"hh_count": 0}
+        keys = np.concatenate(self._keys)
+        hh = hh_mod.extract(self._sk, jnp.asarray(keys[:, 0]),
+                            jnp.asarray(keys[:, 1]), k=self.top_k)
+        live = np.asarray(hh.mask)
+        counts = np.asarray(hh.count)[live]
+        total = float(counts.sum())
+        return {
+            "hh_count": int(live.sum()),
+            "hh_mass": total,
+            "hh_top1_frac": float(counts[0] / total) if total else 0.0,
+            "hh": hh,
+            "grid": self._grid,
+            "tokens_seen": self.tokens_seen,
+        }
+
+    def merged(self, other: "ActivationSketcher") -> sketch_mod.CountSketch:
+        """Cross-worker merge (linearity): local sketches simply add."""
+        return sketch_mod.merge(self._sk, other._sk)
+
+
+@dataclasses.dataclass
+class RouterCollapseMonitor:
+    """HH concentration over router logits — routing-collapse alarm."""
+    sketcher: Optional[ActivationSketcher] = None
+    alarm_top1_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.sketcher is None:
+            self.sketcher = ActivationSketcher(proj_dims=4, bins=12,
+                                               top_k=64, seed=17)
+
+    def observe(self, router_logits: jnp.ndarray) -> None:
+        self.sketcher.observe(router_logits)
+
+    def check(self) -> Dict[str, Any]:
+        rep = self.sketcher.report()
+        rep["collapsed"] = rep.get("hh_top1_frac", 0.0) > self.alarm_top1_frac
+        return rep

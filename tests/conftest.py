@@ -1,0 +1,13 @@
+"""Shared pytest config.
+
+NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+must see the single real CPU device.  Multi-device tests spawn subprocesses
+that set the flag before importing jax (see test_geo.py, test_dryrun.py).
+"""
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (subprocess compiles, dry-runs)")

@@ -1,0 +1,96 @@
+"""Attention invariants: chunking equivalence, GQA vs repeated-KV oracle,
+rope properties, cache-mask semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(b, s, h, kvh, hd, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_chunking_invariance(chunk):
+    """Output must be identical for any q_chunk size."""
+    q, k, v = _qkv(2, 32, 4, 2, 8)
+    pos = jnp.arange(32)
+    full = L.attention(q, k, v, pos, None, causal=True, q_chunk=32)
+    chunked = L.attention(q, k, v, pos, None, causal=True, q_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_matches_repeated_kv():
+    """GQA with kvh<h must equal MHA with explicitly repeated K/V."""
+    q, k, v = _qkv(1, 16, 8, 2, 8, seed=1)
+    pos = jnp.arange(16)
+    gqa = L.attention(q, k, v, pos, None, causal=True, q_chunk=16)
+    k_rep = jnp.repeat(k, 4, axis=2)
+    v_rep = jnp.repeat(v, 4, axis=2)
+    mha = L.attention(q, k_rep, v_rep, pos, None, causal=True, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(gqa), np.asarray(mha),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    """Changing future K/V must not change past outputs."""
+    q, k, v = _qkv(1, 16, 2, 2, 8, seed=2)
+    pos = jnp.arange(16)
+    out1 = L.attention(q, k, v, pos, None, causal=True, q_chunk=16)
+    k2 = k.at[:, 10:].set(99.0)
+    v2 = v.at[:, 10:].set(-99.0)
+    out2 = L.attention(q, k2, v2, pos, None, causal=True, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]),
+                               np.asarray(out2[:, :10]), rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 10:]), np.asarray(out2[:, 10:]))
+
+
+def test_kv_valid_len_masks_cache_tail():
+    """Decode semantics: slots beyond kv_valid_len are invisible."""
+    q, k, v = _qkv(1, 1, 2, 2, 8, seed=3)
+    cache_k = jnp.concatenate([k] * 8, axis=1)          # (1, 8, 2, 8)
+    cache_v = jnp.concatenate([v] * 8, axis=1)
+    poisoned_k = cache_k.at[:, 5:].set(77.0)
+    poisoned_v = cache_v.at[:, 5:].set(-77.0)
+    pos = jnp.asarray([4])
+    a = L.attention(q, cache_k, cache_v, pos, jnp.asarray(5), causal=True)
+    b = L.attention(q, poisoned_k, poisoned_v, pos, jnp.asarray(5),
+                    causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@given(hd=st.sampled_from([8, 16, 64]), theta=st.sampled_from([1e4, 5e5]))
+@settings(max_examples=10, deadline=None)
+def test_rope_properties(hd, theta):
+    """RoPE preserves norms and is relative: <R(p)q, R(p+d)k> depends only
+    on d (shift invariance of the rotary inner product)."""
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 1, 1, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, hd))
+    # norm preservation
+    rq = L.apply_rope(q, jnp.asarray([3]), theta)
+    np.testing.assert_allclose(float(jnp.linalg.norm(rq)),
+                               float(jnp.linalg.norm(q)), rtol=1e-5)
+    # relative property
+    def dot_at(p1, p2):
+        a = L.apply_rope(q, jnp.asarray([p1]), theta)
+        b = L.apply_rope(k, jnp.asarray([p2]), theta)
+        return float(jnp.sum(a * b))
+    assert dot_at(0, 5) == pytest.approx(dot_at(7, 12), rel=1e-4, abs=1e-4)
+
+
+def test_rms_norm_scale_and_dtype():
+    x = jax.random.normal(jax.random.key(0), (2, 3, 16), jnp.bfloat16)
+    out = L.rms_norm(x, jnp.ones((16,), jnp.bfloat16))
+    assert out.dtype == jnp.bfloat16
+    rms = np.sqrt(np.mean(np.asarray(out, np.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=0.1)

@@ -1,0 +1,80 @@
+"""Geo-distributed sketching: multi-device shard_map tests.
+
+These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the flag must be set before jax initializes, and the main test process
+must keep seeing 1 device — per the project's dry-run discipline).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core import geo, pipeline, quantize, sketch, heavy_hitters
+
+    assert len(jax.devices()) == 8
+
+    # clustered data, sharded over 2 "pods" x 4 "data" workers
+    rng = np.random.default_rng(0)
+    n = 64_000
+    centers = np.asarray([[0.2]*4, [0.8]*4, [0.2, 0.8, 0.2, 0.8]])
+    pts = [rng.uniform(0, 1, size=(n // 4, 4))]
+    for c in centers:
+        pts.append(c + 0.02 * rng.normal(size=(n // 4, 4)))
+    pts = np.clip(np.concatenate(pts), 0, 1).astype(np.float32)
+    rng.shuffle(pts)
+    pts = jnp.asarray(pts)
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    grid = quantize.fit_grid(pts, bins=16)
+
+    # --- distributed extraction (hierarchical: data then pod) ---
+    res = geo.geo_extract(mesh, grid, pts, rows=8, log2_cols=12,
+                          top_k=64, data_axes=("data", "pod"), seed=0)
+    assert int(res.local_count) == n
+
+    # --- single-device reference: same grid, same seed => same hashes ---
+    key_hi, key_lo = quantize.points_to_keys(grid, pts)
+    sk = sketch.init(jax.random.key(0), 8, 12)
+    sk = sketch.update_sorted(sk, key_hi, key_lo)
+    hh_ref = heavy_hitters.extract(sk, key_hi, key_lo, k=64)
+
+    # merged sketch table must equal the single-shot table EXACTLY
+    # (linearity: sum of shard sketches == sketch of concatenation)
+    np.testing.assert_allclose(np.asarray(res.merged.table),
+                               np.asarray(sk.table), atol=1e-3)
+
+    # the recovered HH key sets must agree
+    def keyset(hh):
+        m = np.asarray(hh.mask)
+        hi = np.asarray(hh.key_hi, np.uint64)[m]
+        lo = np.asarray(hh.key_lo, np.uint64)[m]
+        return set(((hi << np.uint64(32)) | lo).tolist())
+
+    ks_dist, ks_ref = keyset(res.hh), keyset(hh_ref)
+    overlap = len(ks_dist & ks_ref) / max(len(ks_ref), 1)
+    assert overlap > 0.95, f"HH sets diverge: {overlap}"
+    print("GEO-OK")
+""")
+
+
+@pytest.mark.slow
+def test_geo_extract_multidevice_matches_single_device(tmp_path):
+    script = tmp_path / "geo_test.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    assert "GEO-OK" in out.stdout

@@ -1,0 +1,67 @@
+"""Hash family: determinism, range, empirical uniformity + independence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+
+def _keys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, 2**64, size=n, dtype=np.uint64)
+    return (jnp.asarray((k >> np.uint64(32)).astype(np.uint32)),
+            jnp.asarray((k & np.uint64(0xFFFFFFFF)).astype(np.uint32)))
+
+
+def test_bucket_hash_range_and_determinism():
+    params = hashing.make_params(jax.random.key(0), rows=4)
+    hi, lo = _keys(1000)
+    b1 = hashing.bucket_hash(params, hi, lo, log2_buckets=10)
+    b2 = hashing.bucket_hash(params, hi, lo, log2_buckets=10)
+    assert b1.shape == (4, 1000)
+    assert (b1 == b2).all()
+    assert int(b1.max()) < 1024 and int(b1.min()) >= 0
+
+
+def test_bucket_hash_uniformity():
+    """Chi-square-ish check: bucket occupancy close to uniform."""
+    params = hashing.make_params(jax.random.key(1), rows=1)
+    hi, lo = _keys(200_000, seed=1)
+    b = np.asarray(hashing.bucket_hash(params, hi, lo, log2_buckets=8))[0]
+    counts = np.bincount(b, minlength=256)
+    expected = 200_000 / 256
+    # Poisson std ≈ sqrt(expected) ≈ 28; allow 6 sigma
+    assert np.abs(counts - expected).max() < 6 * np.sqrt(expected)
+
+
+def test_sign_hash_balance_and_values():
+    params = hashing.make_params(jax.random.key(2), rows=2)
+    hi, lo = _keys(100_000, seed=2)
+    s = np.asarray(hashing.sign_hash(params, hi, lo))
+    assert set(np.unique(s)) <= {-1, 1}
+    assert abs(s.mean()) < 0.02        # balanced
+
+
+def test_rows_independent():
+    params = hashing.make_params(jax.random.key(3), rows=2)
+    hi, lo = _keys(50_000, seed=3)
+    s = np.asarray(hashing.sign_hash(params, hi, lo)).astype(np.float64)
+    corr = (s[0] * s[1]).mean()
+    assert abs(corr) < 0.02
+
+
+def test_pairwise_independence_empirical():
+    """E[h(i)h(j)] ~ 0 for i != j (the AMS unbiasedness requirement)."""
+    params = hashing.make_params(jax.random.key(4), rows=1)
+    hi, lo = _keys(4096, seed=4)
+    s = np.asarray(hashing.sign_hash(params, hi, lo))[0].astype(np.float64)
+    outer = np.outer(s, s)
+    off = outer[~np.eye(len(s), dtype=bool)]
+    assert abs(off.mean()) < 0.02
+
+
+def test_fold_u64_to_u32_deterministic():
+    hi, lo = _keys(100)
+    f1 = hashing.fold_u64_to_u32(hi, lo)
+    f2 = hashing.fold_u64_to_u32(hi, lo)
+    assert (f1 == f2).all()

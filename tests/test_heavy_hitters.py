@@ -1,0 +1,117 @@
+"""Heavy-hitter extraction: local exact top-k, global recovery, oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import candidates, heavy_hitters, sketch, u64
+
+
+def _stream(n, n_distinct, seed=0, alpha=1.6):
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_distinct + 1) ** alpha
+    p /= p.sum()
+    ids = rng.choice(n_distinct, size=n, p=p)
+    keys = ids.astype(np.uint64) * np.uint64(0x2545F4914F6CDD1D) + np.uint64(7)
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    return hi, lo, ids
+
+
+def test_local_topk_exact():
+    hi, lo, ids = _stream(8192, 200, seed=0)
+    exact = np.bincount(ids, minlength=200)
+    c = candidates.local_topk(hi, lo, k=16)
+    got = u64.to_py((c.key_hi, c.key_lo))
+    true_order = np.argsort(exact)[::-1]
+    true_keys = (true_order[:16].astype(np.uint64)
+                 * np.uint64(0x2545F4914F6CDD1D) + np.uint64(7))
+    # counts must match exactly for the keys returned
+    top_counts = np.sort(np.asarray(c.count))[::-1]
+    np.testing.assert_array_equal(top_counts,
+                                  np.sort(exact[true_order[:16]])[::-1])
+    assert set(got.tolist()) == set(true_keys.tolist())
+    assert bool(c.mask.all())
+
+
+def test_local_topk_fewer_distinct_than_k():
+    hi, lo, ids = _stream(256, 5, seed=1)
+    c = candidates.local_topk(hi, lo, k=16)
+    assert int(c.mask.sum()) == 5
+    assert float(c.count.sum()) == 256.0   # all mass accounted for
+
+
+def test_extract_single_shard():
+    hi, lo, ids = _stream(50_000, 1_000, seed=2)
+    sk = sketch.init(jax.random.key(0), rows=8, log2_cols=12)
+    sk = sketch.update(sk, hi, lo)
+    hh = heavy_hitters.extract(sk, hi, lo, k=20, candidate_pool=64)
+    exact = np.bincount(ids, minlength=1_000)
+    true_top = np.argsort(exact)[::-1][:20]
+    true_keys = set((true_top.astype(np.uint64)
+                     * np.uint64(0x2545F4914F6CDD1D) + np.uint64(7)).tolist())
+    got = set(u64.to_py((hh.key_hi, hh.key_lo))[np.asarray(hh.mask)].tolist())
+    assert len(got & true_keys) >= 18
+    # counts sorted descending
+    cnt = np.asarray(hh.count)
+    assert (np.diff(cnt) <= 1e-6).all()
+
+
+def test_exact_counts_oracle():
+    hi, lo, ids = _stream(1000, 50, seed=3)
+    exact = np.bincount(ids, minlength=50)
+    q = np.arange(50)
+    qk = q.astype(np.uint64) * np.uint64(0x2545F4914F6CDD1D) + np.uint64(7)
+    qhi = jnp.asarray((qk >> np.uint64(32)).astype(np.uint32))
+    qlo = jnp.asarray((qk & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    got = np.asarray(heavy_hitters.exact_counts(hi, lo, qhi, qlo))
+    np.testing.assert_array_equal(got, exact)
+
+
+def test_candidates_concat():
+    hi, lo, _ = _stream(512, 20, seed=4)
+    a = candidates.local_topk(hi[:256], lo[:256], k=8)
+    b = candidates.local_topk(hi[256:], lo[256:], k=8)
+    c = candidates.concat(a, b)
+    assert c.key_hi.shape == (16,)
+    assert float(c.count.sum()) == float(a.count.sum()) + float(b.count.sum())
+
+
+def test_candidate_pool_recall_bound():
+    """Candidate-pool sizing (§Perf Cell C): with i.i.d. shards, the union
+    of per-shard top-p lists covers ≈ the global top-p keys, NOT
+    shards×p distinct keys — a key of global rank r sits near local rank
+    r on EVERY shard.  So per-shard pool must be ≥ ~1.5·top_k for full
+    recall; pool < top_k provably loses the tail.  This test pins both
+    sides of that bound (it caught an unsafe pool claim during §Perf)."""
+    import jax
+    from repro.core import candidates as cand_mod
+    from repro.core import sketch as sketch_mod
+
+    n_shards, per_shard, k = 8, 20_000, 64
+    sk0 = sketch_mod.init(jax.random.key(0), rows=8, log2_cols=12)
+    merged = sk0
+    pools = {"unsafe": 24, "safe": int(1.5 * k) + 8}
+    cands = {name: [] for name in pools}
+    full_ids = []
+    for w in range(n_shards):
+        hi, lo, ids = _stream(per_shard, 2_000, seed=100 + w)
+        full_ids.append(ids)
+        sk_w = sketch_mod.update_sorted(sk0, hi, lo)
+        merged = sketch_mod.merge(merged, sk_w) if w else sk_w
+        for name, p in pools.items():
+            cands[name].append(cand_mod.local_topk(hi, lo, k=p))
+    exact = np.bincount(np.concatenate(full_ids), minlength=2_000)
+    true_top = set(np.argsort(exact)[::-1][:k].tolist())
+    true_keys = {int(i) * 0x2545F4914F6CDD1D + 7 & 0xFFFFFFFFFFFFFFFF
+                 for i in true_top}
+
+    def recover(cands_list):
+        c = candidates.concat(*cands_list)
+        hh = heavy_hitters.from_candidates(merged, c, k)
+        got = u64.to_py((hh.key_hi, hh.key_lo))[np.asarray(hh.mask)]
+        return sum(int(g) in true_keys for g in got)
+
+    rec_unsafe = recover(cands["unsafe"])
+    rec_safe = recover(cands["safe"])
+    assert rec_safe >= 0.92 * k          # pool ≥ 1.5k ⇒ full recall
+    assert rec_unsafe < 0.7 * k          # pool < k  ⇒ provable tail loss

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing, quantize, sketch as sketch_mod
+from repro.kernels import ops, ref
+
+
+def _points(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, size=(n, d)).astype(np.float32))
+
+
+def _grid(d, bins=16):
+    return quantize.GridSpec(dims=d, bins=bins,
+                             lo=np.zeros(d, np.float32),
+                             hi=np.ones(d, np.float32))
+
+
+# ---------------------------------------------------------------- hash_points
+@pytest.mark.parametrize("n,d,rows,l2c,block", [
+    (256, 4, 4, 10, 128),
+    (1000, 8, 8, 14, 256),     # non-multiple of block -> padding path
+    (512, 2, 16, 18, 512),
+    (64, 12, 2, 6, 64),
+])
+def test_hash_points_matches_ref(n, d, rows, l2c, block):
+    params = hashing.make_params(jax.random.key(0), rows)
+    grid = _grid(d)
+    pts = _points(n, d)
+    kb, ks = ops.hash_points(params, grid, pts, l2c, block_items=block)
+    rb, rs = ref.hash_points(params, grid, pts, l2c)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+# -------------------------------------------------------------- sketch_update
+@pytest.mark.parametrize("n,rows,l2c,block,weighted", [
+    (512, 4, 10, 256, False),
+    (700, 8, 12, 256, True),    # padding path + weighted
+    (256, 16, 8, 128, False),
+    (128, 2, 16, 128, True),    # C at the kernel-path limit
+])
+def test_sketch_update_fused_matches_update(n, rows, l2c, block, weighted):
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 2**64, size=n, dtype=np.uint64)
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32)) if weighted else None
+    sk0 = sketch_mod.init(jax.random.key(2), rows, l2c)
+    a = ops.sketch_update_fused(sk0, hi, lo, values=v, block_items=block)
+    b = sketch_mod.update(sk0, hi, lo, values=v)
+    np.testing.assert_allclose(np.asarray(a.table), np.asarray(b.table),
+                               atol=1e-4)
+
+
+def test_sketch_update_fused_rejects_huge_table():
+    sk = sketch_mod.init(jax.random.key(0), 4, 18)
+    with pytest.raises(ValueError):
+        ops.sketch_update_fused(sk, jnp.zeros(4, jnp.uint32),
+                                jnp.zeros(4, jnp.uint32))
+
+
+# ------------------------------------------------------------ sketch_estimate
+@pytest.mark.parametrize("n_stream,q,rows,l2c,bq,bc", [
+    (5000, 256, 4, 10, 128, 256),
+    (5000, 300, 8, 12, 128, 512),   # query padding path
+    (2000, 64, 16, 10, 64, 128),
+])
+def test_sketch_estimate_mxu_matches_estimate(n_stream, q, rows, l2c, bq, bc):
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 2**32, size=n_stream, dtype=np.uint64)  # collisions
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    sk = sketch_mod.init(jax.random.key(4), rows, l2c)
+    sk = sketch_mod.update(sk, hi, lo)
+    qk = keys[rng.choice(n_stream, q, replace=False)]
+    qhi = jnp.asarray((qk >> np.uint64(32)).astype(np.uint32))
+    qlo = jnp.asarray((qk & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    got = ops.sketch_estimate_mxu(sk, qhi, qlo, block_q=bq, block_c=bc)
+    want = sketch_mod.estimate(sk, qhi, qlo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+# ----------------------------------------------------------------- tsne fused
+@pytest.mark.parametrize("n,dh,block,exag", [
+    (256, 4, 128, 1.0),
+    (300, 8, 128, 4.0),        # padding path + exaggeration
+    (128, 2, 64, 12.0),
+])
+def test_tsne_forces_fused_matches_ref(n, dh, block, exag):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(n, dh)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    beta = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+    zp = ref.tsne_zp(x, beta)
+    z = ref.tsne_z(y)
+    want = ref.tsne_forces(x, y, beta, zp, z, exaggeration=exag)
+    got = ops.tsne_step_fused(x, y, beta, zp, exaggeration=exag, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_tsne_z_kernel_matches_ref():
+    rng = np.random.default_rng(6)
+    y = jnp.asarray(rng.normal(size=(384, 2)).astype(np.float32))
+    from repro.kernels import tsne_forces as tf
+    got = tf.tsne_z(y, block=128)
+    np.testing.assert_allclose(float(got), float(ref.tsne_z(y)), rtol=1e-5)

@@ -1,0 +1,88 @@
+"""End-to-end SnS on synthetic clustered data: the paper's full Fig. 1 flow.
+
+Ground-truth Gaussian mixture (which the paper lacked!) → quantize → sketch
+→ HH → replicas → UMAP/tSNE → cluster purity via the contingency table the
+paper builds in §IV-1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.tsne import TsneConfig
+from repro.core.umap import UmapConfig
+
+
+def _mixture(n, seed=0, dims=4, n_clusters=3, background_frac=0.3):
+    """Dense Gaussian clusters over a uniform background (paper's regime:
+    high density contrast)."""
+    rng = np.random.default_rng(seed)
+    n_bg = int(n * background_frac)
+    n_cl = n - n_bg
+    centers = rng.uniform(0.15, 0.85, size=(n_clusters, dims))
+    per = n_cl // n_clusters
+    pts = [rng.uniform(0, 1, size=(n_bg, dims))]
+    labels = [np.full((n_bg,), -1)]
+    for i, c in enumerate(centers):
+        m = per if i < n_clusters - 1 else n_cl - per * (n_clusters - 1)
+        pts.append(c + 0.02 * rng.normal(size=(m, dims)))
+        labels.append(np.full((m,), i))
+    pts = np.clip(np.concatenate(pts), 0, 1).astype(np.float32)
+    labels = np.concatenate(labels)
+    perm = rng.permutation(n)
+    return jnp.asarray(pts[perm]), labels[perm], centers
+
+
+def test_sns_end_to_end_umap():
+    pts, labels, centers = _mixture(40_000, seed=0)
+    cfg = pipeline.SnsConfig(bins=16, rows=8, log2_cols=12, top_k=256,
+                             max_replicas=4, embedder="umap")
+    res = pipeline.run(cfg, pts,
+                       umap_cfg=UmapConfig(n_neighbors=10, n_epochs=100))
+    assert not np.isnan(np.asarray(res.embedding)).any()
+    # HHs must be dominated by cluster cells: the densest cells of a
+    # clustered + uniform mixture are inside the clusters
+    hh_cells = np.asarray(res.hh.count)[np.asarray(res.hh.mask)]
+    assert hh_cells.size > 10
+    # coverage: clusters hold 70% of mass in ~tiny volume -> top cells
+    # should capture a large fraction
+    assert res.coverage > 0.4
+
+
+def test_sns_end_to_end_tsne():
+    pts, labels, centers = _mixture(20_000, seed=1)
+    cfg = pipeline.SnsConfig(bins=12, rows=8, log2_cols=12, top_k=128,
+                             max_replicas=4, embedder="tsne")
+    res = pipeline.run(cfg, pts,
+                       tsne_cfg=TsneConfig(n_iter=150, perplexity=15.0))
+    assert not np.isnan(np.asarray(res.embedding)).any()
+
+
+def test_hh_recovers_cluster_cells():
+    """Top HH cells must sit on the true cluster centers."""
+    pts, labels, centers = _mixture(50_000, seed=2, n_clusters=3,
+                                    background_frac=0.2)
+    cfg = pipeline.SnsConfig(bins=16, rows=8, log2_cols=14, top_k=64)
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    from repro.core import quantize
+    coords = quantize.unpack(grid, (hh.key_hi, hh.key_lo))
+    hh_centers = np.asarray(quantize.cell_center(grid, coords))
+    live = np.asarray(hh.mask)
+    # each true center must be within one cell of some heavy hitter
+    cell = np.asarray(grid.cell_size)
+    for c in centers:
+        d = np.abs(hh_centers[live] - c).max(axis=1)
+        assert (d < 1.5 * cell.max()).any(), f"no HH near center {c}"
+
+
+def test_assign_points_to_hh():
+    pts, labels, _ = _mixture(20_000, seed=3)
+    cfg = pipeline.SnsConfig(bins=12, rows=8, log2_cols=12, top_k=128)
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    assign = pipeline.assign_points_to_hh(grid, hh, np.asarray(pts))
+    in_hh = assign >= 0
+    # a decent fraction of all points lives in HH cells
+    assert in_hh.mean() > 0.3
+    # cluster points should be assigned far more often than background
+    assert in_hh[labels >= 0].mean() > 2.0 * max(in_hh[labels < 0].mean(), 0.01)

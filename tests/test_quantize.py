@@ -1,0 +1,84 @@
+"""Quantizer: pack/unpack roundtrip (property), grid fitting, collision model."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize, u64
+
+
+@given(dims=st.integers(1, 12), bins=st.integers(2, 32),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(dims, bins, seed):
+    bits = max(1, math.ceil(math.log2(bins)))
+    if dims * bits > 64:
+        return
+    rng = np.random.default_rng(seed)
+    grid = quantize.GridSpec(dims=dims, bins=bins,
+                             lo=np.zeros(dims, np.float32),
+                             hi=np.ones(dims, np.float32))
+    coords = jnp.asarray(rng.integers(0, bins, size=(64, dims)), jnp.uint32)
+    key = quantize.pack(grid, coords)
+    back = quantize.unpack(grid, key)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(coords))
+
+
+def test_pack_rejects_too_many_bits():
+    with pytest.raises(ValueError):
+        quantize.GridSpec(dims=20, bins=32, lo=np.zeros(20, np.float32),
+                          hi=np.ones(20, np.float32))
+
+
+def test_quantize_bounds_and_clip():
+    grid = quantize.GridSpec(dims=2, bins=8,
+                             lo=np.zeros(2, np.float32),
+                             hi=np.ones(2, np.float32))
+    pts = jnp.asarray([[-5.0, 0.5], [0.999, 2.0], [0.0, 0.0]])
+    q = quantize.quantize(grid, pts)
+    assert q.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(q), [[0, 4], [7, 7], [0, 0]])
+
+
+def test_fit_grid_covers_data():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.normal(size=(1000, 4)).astype(np.float32))
+    grid = quantize.fit_grid(pts, bins=16)
+    q = np.asarray(quantize.quantize(grid, pts))
+    assert q.min() >= 0 and q.max() <= 15
+    # interior points (not exactly on the boundary after padding)
+    assert (np.asarray(grid.lo) < np.asarray(pts).min(0)).all()
+    assert (np.asarray(grid.hi) > np.asarray(pts).max(0)).all()
+
+
+def test_cell_center_inverse():
+    grid = quantize.GridSpec(dims=3, bins=10,
+                             lo=np.zeros(3, np.float32),
+                             hi=np.ones(3, np.float32) * 10)
+    coords = jnp.asarray([[0, 5, 9]], jnp.uint32)
+    c = np.asarray(quantize.cell_center(grid, coords))[0]
+    np.testing.assert_allclose(c, [0.5, 5.5, 9.5], rtol=1e-5)
+    # quantizing the center gives back the coords
+    q = np.asarray(quantize.quantize(grid, jnp.asarray(c)[None]))
+    np.testing.assert_array_equal(q[0], [0, 5, 9])
+
+
+def test_collision_rate_paper_numbers():
+    """Paper §III-2: K=1e4, D=10, M=8 -> C≈1057; M=16 -> C≈0.00144."""
+    _, c8 = quantize.collision_rate(8.0**10, 10**4, 10)
+    _, c16 = quantize.collision_rate(16.0**10, 10**4, 10)
+    assert abs(c8 - 1057) / 1057 < 0.05
+    assert abs(c16 - 0.00144) / 0.00144 < 0.05
+
+
+def test_points_to_keys_distinct_cells_distinct_keys():
+    grid = quantize.GridSpec(dims=2, bins=4,
+                             lo=np.zeros(2, np.float32),
+                             hi=np.ones(2, np.float32))
+    pts = jnp.asarray([[0.1, 0.1], [0.9, 0.9], [0.1, 0.12]])
+    k = quantize.points_to_keys(grid, pts)
+    keys = u64.to_py(k)
+    assert keys[0] != keys[1]
+    assert keys[0] == keys[2]

@@ -1,0 +1,78 @@
+"""Replica generation: schemes, mass conservation, jitter containment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize, replicas
+from repro.core.heavy_hitters import HeavyHitters
+
+
+def _hh(counts):
+    k = len(counts)
+    keys = np.arange(k, dtype=np.uint64) * np.uint64(7919)
+    order = np.argsort(counts)[::-1]
+    counts = np.asarray(counts, np.float32)[order]
+    keys = keys[order]
+    return HeavyHitters(
+        key_hi=jnp.asarray((keys >> np.uint64(32)).astype(np.uint32)),
+        key_lo=jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+        count=jnp.asarray(counts),
+        mask=jnp.ones((k,), bool))
+
+
+def test_replica_counts_uniform():
+    hh = _hh([100, 50, 10, 1])
+    n = np.asarray(replicas.replica_counts(hh, "uniform", 4))
+    np.testing.assert_array_equal(n, [4, 4, 4, 4])
+
+
+def test_replica_counts_count_scheme():
+    # paper: 1 + floor(log2(f / f_min))
+    hh = _hh([16.0, 8.0, 4.0, 1.0])
+    n = np.asarray(replicas.replica_counts(hh, "count", 8))
+    np.testing.assert_array_equal(n, [5, 4, 3, 1])
+
+
+def test_replica_counts_rank_scheme():
+    # paper: 1 + floor(log2(r_max / r)), ranks 1..4
+    hh = _hh([16.0, 8.0, 4.0, 1.0])
+    n = np.asarray(replicas.replica_counts(hh, "rank", 8))
+    np.testing.assert_array_equal(n, [3, 2, 1, 1])
+
+
+def test_representatives_mass_and_jitter():
+    grid = quantize.GridSpec(dims=3, bins=8,
+                             lo=np.zeros(3, np.float32),
+                             hi=np.ones(3, np.float32) * 8)
+    # build HHs from real cells so unpack works
+    coords = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.uint32)
+    hi, lo = quantize.pack(grid, coords)
+    hh = HeavyHitters(key_hi=hi, key_lo=lo,
+                      count=jnp.asarray([100.0, 10.0]),
+                      mask=jnp.ones((2,), bool))
+    rep = replicas.make_representatives(jax.random.key(0), grid, hh,
+                                        scheme="count", max_replicas=8)
+    pts, w, ids = replicas.compact(rep)
+    # total mass preserved per HH
+    np.testing.assert_allclose(w[ids == 0].sum(), 100.0, rtol=1e-5)
+    np.testing.assert_allclose(w[ids == 1].sum(), 10.0, rtol=1e-5)
+    # jitter stays within ±jitter_frac of cell size around the center
+    centers = np.asarray(quantize.cell_center(grid, coords))
+    for i in range(2):
+        delta = np.abs(pts[ids == i] - centers[i])
+        assert (delta <= 0.25 * 1.0 + 1e-5).all()
+
+
+def test_masked_hh_get_no_replicas():
+    grid = quantize.GridSpec(dims=2, bins=4,
+                             lo=np.zeros(2, np.float32),
+                             hi=np.ones(2, np.float32))
+    coords = jnp.asarray([[1, 1], [2, 2]], jnp.uint32)
+    hi, lo = quantize.pack(grid, coords)
+    hh = HeavyHitters(key_hi=hi, key_lo=lo,
+                      count=jnp.asarray([50.0, 0.0]),
+                      mask=jnp.asarray([True, False]))
+    rep = replicas.make_representatives(jax.random.key(0), grid, hh,
+                                        scheme="uniform", max_replicas=4)
+    _, _, ids = replicas.compact(rep)
+    assert set(ids.tolist()) == {0}

@@ -1,0 +1,127 @@
+"""Count Sketch: estimation accuracy, linearity (merge), update-path
+equivalence, top-k recovery, ℓ₂ estimate.  Property tests via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch, u64
+
+
+def _zipf_stream(n_items, n_distinct, seed=0, alpha=1.5):
+    """Zipfian key stream (fat tail, like the paper's clustered data)."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_distinct + 1) ** alpha
+    p /= p.sum()
+    ids = rng.choice(n_distinct, size=n_items, p=p).astype(np.uint64)
+    keys = ids * np.uint64(0x9E3779B97F4A7C15) + np.uint64(12345)  # spread
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    return hi, lo, ids, keys
+
+
+def _exact_counts(ids, n_distinct):
+    return np.bincount(ids.astype(np.int64), minlength=n_distinct)
+
+
+def test_estimate_accuracy_heavy_items():
+    hi, lo, ids, keys = _zipf_stream(50_000, 2_000, seed=1)
+    sk = sketch.init(jax.random.key(0), rows=8, log2_cols=12)
+    sk = sketch.update(sk, hi, lo)
+    exact = _exact_counts(ids, 2_000)
+    # query the 20 heaviest distinct keys
+    top = np.argsort(exact)[::-1][:20]
+    qk = top.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(12345)
+    qhi = jnp.asarray((qk >> np.uint64(32)).astype(np.uint32))
+    qlo = jnp.asarray((qk & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    est = np.asarray(sketch.estimate(sk, qhi, qlo))
+    rel = np.abs(est - exact[top]) / exact[top]
+    assert rel.max() < 0.05, f"relative error too high: {rel}"
+
+
+def test_merge_linearity():
+    """merge(sketch(A), sketch(B)) == sketch(A ++ B) exactly."""
+    hi, lo, _, _ = _zipf_stream(10_000, 500, seed=2)
+    sk0 = sketch.init(jax.random.key(1), rows=4, log2_cols=10)
+    a = sketch.update(sk0, hi[:5000], lo[:5000])
+    b = sketch.update(sk0, hi[5000:], lo[5000:])
+    ab = sketch.merge(a, b)
+    full = sketch.update(sk0, hi, lo)
+    np.testing.assert_array_equal(np.asarray(ab.table), np.asarray(full.table))
+
+
+def test_update_sorted_equivalent():
+    hi, lo, _, _ = _zipf_stream(4_096, 300, seed=3)
+    sk0 = sketch.init(jax.random.key(2), rows=4, log2_cols=10)
+    a = sketch.update(sk0, hi, lo)
+    b = sketch.update_sorted(sk0, hi, lo)
+    np.testing.assert_allclose(np.asarray(a.table), np.asarray(b.table),
+                               atol=1e-4)
+
+
+def test_update_mask_and_values():
+    hi, lo, _, _ = _zipf_stream(128, 50, seed=4)
+    sk0 = sketch.init(jax.random.key(3), rows=4, log2_cols=8)
+    v = jnp.arange(128, dtype=jnp.float32)
+    m = jnp.arange(128) < 64
+    a = sketch.update(sk0, hi, lo, values=v, mask=m)
+    b = sketch.update(sk0, hi[:64], lo[:64], values=v[:64])
+    np.testing.assert_allclose(np.asarray(a.table), np.asarray(b.table),
+                               atol=1e-4)
+
+
+@given(rows=st.integers(2, 8), log2_cols=st.integers(6, 12),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_property_merge_commutes(rows, log2_cols, seed):
+    hi, lo, _, _ = _zipf_stream(1_000, 100, seed=seed)
+    sk0 = sketch.init(jax.random.key(seed), rows=rows, log2_cols=log2_cols)
+    a = sketch.update(sk0, hi[:500], lo[:500])
+    b = sketch.update(sk0, hi[500:], lo[500:])
+    np.testing.assert_array_equal(
+        np.asarray(sketch.merge(a, b).table),
+        np.asarray(sketch.merge(b, a).table))
+
+
+def test_l2_estimate():
+    hi, lo, ids, _ = _zipf_stream(20_000, 1_000, seed=5)
+    sk = sketch.init(jax.random.key(4), rows=16, log2_cols=12)
+    sk = sketch.update(sk, hi, lo)
+    exact_l2 = float(np.sqrt((_exact_counts(ids, 1_000) ** 2).sum()))
+    est = float(sketch.l2_estimate(sk))
+    assert abs(est - exact_l2) / exact_l2 < 0.15
+
+
+def test_tensor_sketch_roundtrip_topk():
+    """Gradient-compression primitive: heavy coordinates recoverable."""
+    n = 4096
+    rng = np.random.default_rng(6)
+    g = rng.normal(scale=0.01, size=n).astype(np.float32)
+    heavy_idx = rng.choice(n, 16, replace=False)
+    g[heavy_idx] += np.sign(rng.normal(size=16)) * 5.0
+    sk = sketch.init(jax.random.key(5), rows=8, log2_cols=10)
+    sk = sketch.tensor_sketch_update(sk, jnp.asarray(g))
+    est = np.asarray(sketch.tensor_sketch_estimate(sk, n))
+    got = set(np.argsort(np.abs(est))[::-1][:16])
+    assert len(got & set(heavy_idx)) >= 14   # recover nearly all heavy coords
+
+
+def test_topk_from_candidates_dedupes():
+    hi, lo, ids, keys = _zipf_stream(20_000, 500, seed=7)
+    sk = sketch.init(jax.random.key(6), rows=8, log2_cols=12)
+    sk = sketch.update(sk, hi, lo)
+    exact = _exact_counts(ids, 500)
+    top_true = set(np.argsort(exact)[::-1][:10])
+    # candidates: top-30 true keys, each duplicated 3x
+    cand_ids = np.repeat(np.argsort(exact)[::-1][:30], 3)
+    ck = cand_ids.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(12345)
+    chi = jnp.asarray((ck >> np.uint64(32)).astype(np.uint32))
+    clo = jnp.asarray((ck & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    thi, tlo, test_ = sketch.topk_from_candidates(sk, chi, clo, 10)
+    got_keys = set(u64.to_py((thi, tlo)).tolist())
+    true_keys = {int(i) * 0x9E3779B97F4A7C15 + 12345 & 0xFFFFFFFFFFFFFFFF
+                 for i in top_true}
+    # no duplicates in output
+    assert len(got_keys) == 10
+    assert len(got_keys & true_keys) >= 9

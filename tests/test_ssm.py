@@ -1,0 +1,89 @@
+"""SSD correctness: chunked matmul form vs naive sequential recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+def _naive_ssd(xh, dt, a_log, b, c, init_state=None):
+    """Reference: step-by-step recurrence h_t = dA h + dt B x; y = C h."""
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    a = -np.exp(np.asarray(a_log, np.float64))
+    state = np.zeros((bsz, h, p, n), np.float64) if init_state is None \
+        else np.asarray(init_state, np.float64)
+    xh = np.asarray(xh, np.float64)
+    dt = np.asarray(dt, np.float64)
+    b = np.asarray(b, np.float64)
+    c = np.asarray(c, np.float64)
+    ys = np.zeros_like(xh)
+    for t in range(s):
+        da = np.exp(dt[:, t, :] * a[None, :])              # (B, H)
+        state = state * da[:, :, None, None] + \
+            np.einsum("bhp,bn,bh->bhpn", xh[:, t], b[:, t], dt[:, t])
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, c[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("bsz,s,h,p,n,chunk", [
+    (2, 16, 3, 4, 8, 4),
+    (1, 32, 2, 8, 16, 8),
+    (2, 24, 4, 4, 4, 24),    # single chunk
+])
+def test_ssd_scan_matches_naive(bsz, s, h, p, n, chunk):
+    rng = np.random.default_rng(0)
+    xh = jnp.asarray(rng.normal(size=(bsz, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(bsz, s, h)).astype(np.float32))
+    a_log = jnp.asarray(rng.uniform(-1, 1, size=(h,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    y, final = ssm.ssd_scan(xh, dt, a_log, b, c, chunk)
+    y_ref, final_ref = _naive_ssd(xh, dt, a_log, b, c)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_with_init_state_continues():
+    """Processing [first half] then [second half w/ carried state] must equal
+    one full pass — the streaming/prefill-chunking invariant."""
+    rng = np.random.default_rng(1)
+    bsz, s, h, p, n, chunk = 1, 32, 2, 4, 8, 8
+    xh = jnp.asarray(rng.normal(size=(bsz, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(bsz, s, h)).astype(np.float32))
+    a_log = jnp.asarray(rng.uniform(-1, 1, size=(h,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    y_full, st_full = ssm.ssd_scan(xh, dt, a_log, b, c, chunk)
+    y1, st1 = ssm.ssd_scan(xh[:, :16], dt[:, :16], a_log, b[:, :16],
+                           c[:, :16], chunk)
+    y2, st2 = ssm.ssd_scan(xh[:, 16:], dt[:, 16:], a_log, b[:, 16:],
+                           c[:, 16:], chunk, init_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_padded_heads_zero_contribution():
+    """TP-padded SSD heads must not change the layer output."""
+    key = jax.random.key(0)
+    d_model, d_inner, n, conv_w = 32, 64, 8, 4
+    real_heads, headdim = 4, 16
+    x = jax.random.normal(jax.random.key(1), (2, 8, d_model), jnp.float32)
+    p_exact = ssm.init_ssm(key, d_model, d_inner, n, real_heads, real_heads,
+                           conv_w, jnp.float32)
+    p_padded = ssm.init_ssm(key, d_model, d_inner, n, 8, real_heads,
+                            conv_w, jnp.float32)
+    y1, _ = ssm.ssm_forward(p_exact, x, heads=real_heads, n_state=n, chunk=8)
+    y2, _ = ssm.ssm_forward(p_padded, x, heads=8, n_state=n, chunk=8)
+    # padded lanes are zeroed at init => identical function up to the RNG
+    # draws; compare only the *structure*: padded output must be finite and
+    # the zero-lane property must hold
+    assert np.isfinite(np.asarray(y2)).all()
+    w_x = np.asarray(p_padded.w_x)
+    assert (w_x[:, real_heads * headdim:] == 0).all()
+    w_dt = np.asarray(p_padded.w_dt)
+    assert (w_dt[:, real_heads:] == 0).all()

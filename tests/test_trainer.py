@@ -1,0 +1,94 @@
+"""Trainer: fault injection -> restart -> bit-exact continuation; data
+loader determinism + straggler stealing; activation sketcher telemetry."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import ShardPlan, ShardedLoader, zipf_token_stream
+from repro.train.steps import TrainStepConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+TCFG = TrainStepConfig(q_chunk=16, peak_lr=1e-3, warmup_steps=2,
+                       total_steps=50)
+
+
+def _batch_fn(step):
+    return zipf_token_stream(jax.random.key(1000 + step), 2, 32,
+                             CFG.vocab_size)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def test_fault_injection_and_bitexact_resume(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    rc = TrainerConfig(total_steps=12, ckpt_every=4, ckpt_dir=ckpt,
+                       log_every=4)
+
+    # run A: die at step 10 (after the step-8 checkpoint)
+    def bomb(step):
+        if step == 10:
+            raise _Boom()
+
+    with pytest.raises(_Boom):
+        Trainer(CFG, TCFG, rc, _batch_fn, fault_hook=bomb).run()
+
+    # run B: restart — must resume from step 8 and finish
+    tr = Trainer(CFG, TCFG, rc, _batch_fn)
+    assert tr.start_step == 8
+    out = tr.run()
+    assert out["final_step"] == 12
+
+    # run C (oracle): train 0..12 uninterrupted in a fresh dir
+    rc2 = TrainerConfig(total_steps=12, ckpt_every=12,
+                        ckpt_dir=str(tmp_path / "oracle"), log_every=4)
+    out2 = Trainer(CFG, TCFG, rc2, _batch_fn).run()
+
+    # bit-exact: same final loss metrics
+    a = [m for m in out["metrics"] if m["step"] == 12][0]
+    b = [m for m in out2["metrics"] if m["step"] == 12][0]
+    assert a["loss"] == b["loss"], (a, b)
+
+
+def test_trainer_with_activation_monitor(tmp_path):
+    rc = TrainerConfig(total_steps=6, ckpt_every=6,
+                       ckpt_dir=str(tmp_path / "c"), log_every=2,
+                       monitor_activations=True)
+    out = Trainer(CFG, TCFG, rc, _batch_fn).run()
+    rep = out["activation_report"]
+    assert rep["hh_count"] > 0
+    assert rep["tokens_seen"] > 0
+
+
+def test_shard_plan_deterministic_and_complete():
+    plan = ShardPlan(num_shards=64, num_hosts=4, epoch=3)
+    all_shards = []
+    for h in range(4):
+        s = plan.shards_for(h)
+        assert s == plan.shards_for(h)          # deterministic
+        all_shards.extend(s)
+    assert sorted(all_shards) == list(range(64))  # partition, no overlap
+
+
+def test_loader_straggler_stealing():
+    plan = ShardPlan(num_shards=16, num_hosts=2)
+    seen = []
+
+    def mk(shard, b):
+        return {"shard": shard}
+
+    fast = ShardedLoader(plan, host=0, make_batch=mk)
+    for shard, _ in fast:
+        seen.append(shard)
+    # host 1 "died" after finishing 2 shards
+    done_by_h1 = plan.shards_for(1)[:2]
+    for shard, _ in fast.steal(globally_completed=done_by_h1):
+        seen.append(shard)
+    assert sorted(seen + done_by_h1) == list(range(16))

@@ -1,0 +1,64 @@
+"""Property tests: u64 limb arithmetic must match numpy uint64 exactly."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import u64
+
+u64s = st.integers(min_value=0, max_value=2**64 - 1)
+u32s = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _np64(x):
+    return np.uint64(x & 0xFFFFFFFFFFFFFFFF)
+
+
+@given(u64s, u64s)
+@settings(max_examples=50, deadline=None)
+def test_add(a, b):
+    got = u64.to_py(u64.add(u64.from_py(a), u64.from_py(b)))
+    assert got == _np64(a + b)
+
+
+@given(u64s, u32s)
+@settings(max_examples=50, deadline=None)
+def test_add_u32(a, x):
+    got = u64.to_py(u64.add_u32(u64.from_py(a), jnp.uint32(x)))
+    assert got == _np64(a + x)
+
+
+@given(u32s, u32s)
+@settings(max_examples=50, deadline=None)
+def test_umul32_full(x, y):
+    got = u64.to_py(u64.umul32_full(jnp.uint32(x), jnp.uint32(y)))
+    assert got == _np64(x * y)
+
+
+@given(u64s, u32s)
+@settings(max_examples=50, deadline=None)
+def test_mul_u32(a, x):
+    got = u64.to_py(u64.mul_u32(u64.from_py(a), jnp.uint32(x)))
+    assert got == _np64(a * x)
+
+
+@given(u64s, st.integers(min_value=0, max_value=63))
+@settings(max_examples=50, deadline=None)
+def test_shr_shl(a, s):
+    assert u64.to_py(u64.shr(u64.from_py(a), s)) == _np64(a >> s)
+    assert u64.to_py(u64.shl(u64.from_py(a), s)) == _np64(a << s)
+
+
+@given(u64s, u64s)
+@settings(max_examples=50, deadline=None)
+def test_xor_eq_less(a, b):
+    assert u64.to_py(u64.xor(u64.from_py(a), u64.from_py(b))) == _np64(a ^ b)
+    assert bool(u64.eq(u64.from_py(a), u64.from_py(b))) == (a == b)
+    assert bool(u64.less(u64.from_py(a), u64.from_py(b))) == (a < b)
+
+
+def test_vectorized_shapes():
+    a = u64.from_py(12345, shape=(4, 3))
+    b = u64.from_py(2**63 + 17, shape=(4, 3))
+    hi, lo = u64.add(a, b)
+    assert hi.shape == (4, 3) and lo.shape == (4, 3)
+    assert (u64.to_py((hi, lo)) == _np64(12345 + 2**63 + 17)).all()

@@ -1,0 +1,70 @@
+"""UMAP: ab curve fit, kNN exactness, fuzzy set properties, blobs separate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import umap
+
+
+def _blobs(n_per, centers, scale=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    cs = np.asarray(centers, np.float32)
+    pts = np.concatenate([
+        c + scale * rng.normal(size=(n_per, cs.shape[1])).astype(np.float32)
+        for c in cs])
+    labels = np.repeat(np.arange(len(cs)), n_per)
+    return jnp.asarray(pts), labels
+
+
+def test_fit_ab_default_close_to_umap_learn():
+    # umap-learn's values for spread=1.0, min_dist=0.1: a≈1.577, b≈0.895
+    a, b = umap.fit_ab(1.0, 0.1)
+    assert abs(a - 1.577) < 0.15
+    assert abs(b - 0.895) < 0.05
+
+
+def test_knn_graph_exact():
+    x = jnp.asarray([[0.0, 0], [1, 0], [2, 0], [10, 0]])
+    idx, dist = umap.knn_graph(x, 2)
+    idx = np.asarray(idx)
+    assert set(idx[0].tolist()) == {1, 2}
+    assert set(idx[3].tolist()) == {2, 1}
+    np.testing.assert_allclose(np.asarray(dist)[0], [1.0, 2.0], atol=1e-5)
+
+
+def test_fuzzy_set_properties():
+    x, _ = _blobs(30, [[0, 0], [5, 5]], seed=1)
+    idx, dist = umap.knn_graph(x, 5)
+    edges, memb = umap.fuzzy_simplicial_set(idx, dist)
+    memb = np.asarray(memb)
+    assert edges.shape == (60 * 5, 2)
+    assert (memb >= 0).all() and (memb <= 1.0 + 1e-5).all()
+    # nearest neighbour always has membership ~1 before symmetrization;
+    # after t-conorm it can only grow — every node must have >=1 strong edge
+    strong = {}
+    e = np.asarray(edges)
+    for (s, d), m in zip(e, memb):
+        strong[s] = max(strong.get(s, 0.0), m)
+    assert min(strong.values()) > 0.9
+
+
+def test_umap_blobs_separate():
+    x, labels = _blobs(40, [[0, 0, 0], [5, 5, 5], [-5, 5, 0]], seed=2)
+    cfg = umap.UmapConfig(n_neighbors=10, n_epochs=150)
+    y = np.asarray(umap.run_umap(jax.random.key(0), x, cfg))
+    assert not np.isnan(y).any()
+    intra, inter = [], []
+    for a in range(3):
+        ya = y[labels == a]
+        intra.append(np.linalg.norm(ya - ya.mean(0), axis=1).mean())
+        for b in range(a + 1, 3):
+            inter.append(np.linalg.norm(ya.mean(0) - y[labels == b].mean(0)))
+    assert min(inter) > 1.5 * max(intra)
+
+
+def test_weighted_umap_runs():
+    x, _ = _blobs(30, [[0, 0], [4, 0]], seed=3)
+    w = jnp.concatenate([jnp.full((30,), 100.0), jnp.ones((30,))])
+    cfg = umap.UmapConfig(n_neighbors=8, n_epochs=50)
+    y = np.asarray(umap.run_umap(jax.random.key(1), x, cfg, weights=w))
+    assert not np.isnan(y).any()
