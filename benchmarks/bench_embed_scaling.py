@@ -1,0 +1,141 @@
+"""Embed-stage scaling: dense vs tiled tSNE gradient, time + memory vs N.
+
+Demonstrates the tentpole claim: the dense backend's per-iteration peak
+buffer grows as 3·N²·4 bytes (the cliff that pinned the paper at
+N ≈ 2·10⁴ representatives), while the tiled backend's peak temp stays at
+block·N — a flat line in N for fixed work per row.
+
+Peak buffer sizes are measured *statically* by walking the jaxpr of one
+gradient step and taking the largest intermediate — no allocation needed,
+so the dense trajectory can be reported past the point where it would
+OOM.  Iteration times are wall-clock (dense only attempted while its
+buffers fit, ``--dense-max``).
+
+    PYTHONPATH=src python -m benchmarks.bench_embed_scaling \
+        --sizes 8192,16384,32768,65536 --json-out embed_scaling.json
+
+Also times the chunked UMAP kNN stage at each N (the other former O(N²)
+buffer).  Emits a JSON trajectory; ``run()`` returns it as a string for
+benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import tsne, umap
+from repro.core.tsne import PointStats
+
+
+def iter_jaxpr_avals(jaxpr):
+    """Yield every intermediate abstract value in a jaxpr, recursively."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval"):
+                yield v.aval
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                yield from iter_jaxpr_avals(sub)
+
+
+def _sub_jaxprs(param):
+    vals = param if isinstance(param, (list, tuple)) else [param]
+    for v in vals:
+        if hasattr(v, "jaxpr"):          # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):         # raw Jaxpr
+            yield v
+
+
+def peak_buffer_bytes(fn, *args) -> int:
+    """Largest single intermediate of fn(*args), from the jaxpr (static)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    best = 0
+    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
+        if hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            best = max(best, int(np.prod(aval.shape, dtype=np.int64))
+                       * aval.dtype.itemsize)
+    return best
+
+
+def _synthetic_stats(n: int, rng) -> PointStats:
+    """Plausible calibration stats without the calibration pass (timing the
+    gradient, not the one-off setup)."""
+    beta = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    shift = jnp.zeros((n,), jnp.float32)
+    zp = jnp.asarray(rng.uniform(5.0, 50.0, n).astype(np.float32))
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    return PointStats(beta=beta, shift=shift, zp=zp, w=w)
+
+
+def run(sizes: Sequence[int] = (8192, 16384, 32768, 65536),
+        dense_max: int = 16384, block: int = 512, dims_hi: int = 8,
+        iters: int = 2, umap_k: int = 15,
+        json_out: Optional[str] = None) -> str:
+    rng = np.random.default_rng(0)
+    records = []
+    for n in sizes:
+        x = jnp.asarray(rng.normal(size=(n, dims_hi)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        stats = _synthetic_stats(n, rng)
+        for backend in ("dense", "tiled"):
+            def grad(y_, _backend=backend):
+                return tsne.embedding_grad(x, y_, stats, 1.0,
+                                           backend=_backend, block=block)[0]
+
+            rec = {"stage": "tsne_grad", "backend": backend, "n": n,
+                   "block": block,
+                   "peak_buffer_bytes": peak_buffer_bytes(grad, y)}
+            if backend == "dense" and n > dense_max:
+                rec["iter_time_s"] = None
+                rec["skipped"] = (f"dense O(N²) buffers at N={n} "
+                                  f"(~{rec['peak_buffer_bytes'] / 1e9:.1f} GB)"
+                                  " — over --dense-max")
+            else:
+                jitted = jax.jit(grad)
+                rec["iter_time_s"] = time_fn(jitted, y, warmup=1, iters=iters)
+            records.append(rec)
+            print(f"# tsne_grad {backend:5s} N={n:6d} "
+                  f"peak={rec['peak_buffer_bytes'] / 1e6:10.1f} MB "
+                  f"t={rec['iter_time_s']}", flush=True)
+
+        def knn(x_):
+            return umap.knn_graph(x_, umap_k, block=block)
+
+        rec = {"stage": "umap_knn", "backend": "tiled", "n": n,
+               "block": block, "peak_buffer_bytes": peak_buffer_bytes(knn, x),
+               "iter_time_s": time_fn(jax.jit(knn), x, warmup=1, iters=1)}
+        records.append(rec)
+        print(f"# umap_knn  tiled N={n:6d} "
+              f"peak={rec['peak_buffer_bytes'] / 1e6:10.1f} MB "
+              f"t={rec['iter_time_s']:.3f}", flush=True)
+
+    out = json.dumps({"bench": "embed_scaling", "records": records}, indent=2)
+    if json_out:
+        with open(json_out, "w") as f:
+            f.write(out + "\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="8192,16384,32768,65536")
+    ap.add_argument("--dense-max", type=int, default=16384,
+                    help="largest N at which the dense backend is timed")
+    ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    print(run(sizes=sizes, dense_max=args.dense_max, block=args.block,
+              iters=args.iters, json_out=args.json_out))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def main() -> None:
     from benchmarks import (bench_sketch_scaling, bench_error_vs_rank,
                             bench_hh_vs_sampling, bench_coverage,
                             bench_collision_model, bench_pipeline_quality,
-                            bench_kernels)
+                            bench_kernels, bench_embed_scaling)
     n_scale = 200_000 if args.fast else 2_000_000
     n_mid = 100_000 if args.fast else 1_000_000
     n_small = 60_000 if args.fast else 300_000
@@ -40,6 +40,11 @@ def main() -> None:
         ("collision_model", lambda: bench_collision_model.run()),
         ("pipeline_quality", lambda: bench_pipeline_quality.run(n_small)),
         ("kernel_paths", lambda: bench_kernels.run()),
+        ("embed_scaling", lambda: bench_embed_scaling.run(
+            sizes=(4096, 8192) if args.fast
+            else (8192, 16384, 32768, 65536),
+            dense_max=8192 if args.fast else 16384,
+            iters=1 if args.fast else 2)),
     ]
     for name, fn in jobs:
         if args.only and args.only != name:

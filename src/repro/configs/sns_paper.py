@@ -25,3 +25,18 @@ SDSS = SnsConfig(
 CANCER_ERROR_EVAL = SnsConfig(
     bins=22, rows=16, log2_cols=18, top_k=20_000,
     embedder="umap", embed_dims=2)
+
+# Beyond the paper: the tiled/pallas embed backends never materialize an
+# (N, N) buffer, so the representative budget is no longer capped at the
+# paper's 2·10^4 — 10^5 heavy hitters embed in O(block·N) memory.
+CANCER_100K = SnsConfig(
+    bins=32, rows=16, log2_cols=20, top_k=100_000,
+    replica_scheme="count", max_replicas=4, jitter_frac=0.25,
+    embedder="tsne", embed_dims=2,
+    embed_backend="tiled", embed_block=512)
+
+SDSS_100K = SnsConfig(
+    bins=28, rows=16, log2_cols=20, top_k=100_000,
+    replica_scheme="count", max_replicas=4, jitter_frac=0.25,
+    embedder="umap", embed_dims=4,
+    embed_backend="tiled", embed_block=2048)

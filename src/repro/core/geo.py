@@ -38,6 +38,18 @@ from repro.core.quantize import GridSpec
 from repro.core.sketch import CountSketch
 
 
+def shard_map_compat(*, mesh, in_specs, out_specs):
+    """Decorator: ``jax.shard_map`` with replication checks off, across the
+    API move (new ``jax.shard_map(check_vma=)`` vs the older
+    ``jax.experimental.shard_map.shard_map(check_rep=)``)."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return functools.partial(_sm, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
 class GeoSketchResult(NamedTuple):
     hh: HeavyHitters            # replicated global top-K
     merged: CountSketch         # replicated merged sketch
@@ -78,9 +90,7 @@ def geo_extract(mesh: Mesh, grid: GridSpec, points: jnp.ndarray,
     in_specs = (P(), pspec)           # sketch replicated, points sharded
     out_specs = (P(), P(), P())       # everything replicated afterwards
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)
+    @shard_map_compat(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     def spmd(sk, pts):
         sk_local, cands = sketch_shard(sk, grid, pts, pool)
         hh, merged = hh_mod.distributed_extract(
@@ -109,24 +119,14 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
         data_axes = (data_axes,)
     pool = candidate_pool or 2 * top_k
     sk0 = sketch_mod.init(jax.random.key(seed), rows, log2_cols)
-    axis_sizes = [mesh.shape[a] for a in data_axes]
-    n_shards = int(jnp.prod(jnp.asarray(axis_sizes)))
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P(),),
-        out_specs=(P(), P(), P()), check_vma=False)
+    @shard_map_compat(mesh=mesh, in_specs=(P(),),
+                      out_specs=(P(), P(), P()))
     def spmd(sk):
         # linear shard index from the mesh axes
         idx = jnp.zeros((), jnp.int32)
         for a in data_axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-
-        def body(b, carry):
-            sk, cand_keys = carry
-            pts, mask = shard_fn(idx, b)
-            key_hi, key_lo = quantize.points_to_keys(grid, pts)
-            sk = sketch_mod.update_sorted(sk, key_hi, key_lo, mask=mask)
-            return sk, cand_keys + [(key_hi, key_lo, mask)]
 
         # python loop over batches (static count) — keeps candidate keys
         sk_local = sk

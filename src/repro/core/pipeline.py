@@ -39,6 +39,8 @@ class SnsConfig:
     jitter_frac: float = 0.25
     embedder: str = "umap"         # "umap" | "tsne"
     embed_dims: int = 2
+    embed_backend: str = "dense"   # tSNE gradient: "dense"|"tiled"|"pallas"
+    embed_block: int = 512         # row-block for tiled/pallas tSNE + kNN
     seed: int = 0
 
 
@@ -87,11 +89,16 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
     pts, w, ids = replicas.compact(reps)
     x = jnp.asarray(pts)
     wj = jnp.asarray(w)
+    # SnsConfig is authoritative for the embedding backend/block — the
+    # tsne/umap cfgs carry algorithm hyper-parameters only.
     if cfg.embedder == "tsne":
         tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
+        tc = dataclasses.replace(tc, backend=cfg.embed_backend,
+                                 block=cfg.embed_block)
         emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj)
     elif cfg.embedder == "umap":
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
+        uc = dataclasses.replace(uc, block=cfg.embed_block)
         emb = umap_mod.run_umap(kembed, x, uc, weights=wj)
     else:
         raise ValueError(f"unknown embedder {cfg.embedder!r}")
@@ -106,8 +113,7 @@ def run(cfg: SnsConfig, points: jnp.ndarray,
                             data_axes=data_axes)
     reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
                                     umap_cfg=umap_cfg)
-    n_total = points.shape[0] * (points.shape[1] if points.ndim == 3 else 1) \
-        if points.ndim == 3 else points.reshape(-1, points.shape[-1]).shape[0]
+    n_total = int(np.prod(points.shape[:-1]))  # all leading dims are batch
     coverage = float(jnp.sum(hh.count) / max(n_total, 1))
     return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
                      rep_weight=w, rep_hh_id=ids, coverage=coverage)
@@ -122,19 +128,23 @@ def assign_points_to_hh(grid: GridSpec, hh: HeavyHitters,
     paper does for the contingency table (§IV-1).  Chunked exact match on
     packed keys."""
     n = points.shape[0]
-    hh_hi = np.asarray(hh.key_hi)
-    hh_lo = np.asarray(hh.key_lo)
-    hh_mask = np.asarray(hh.mask)
+    hh_hi = np.asarray(hh.key_hi, np.uint64)
+    hh_lo = np.asarray(hh.key_lo, np.uint64)
+    live = np.asarray(hh.mask).astype(bool)
+    packed = (hh_hi << np.uint64(32)) | hh_lo
+    order = np.argsort(packed[live], kind="stable")
+    sorted_keys = packed[live][order]
+    sorted_ids = np.flatnonzero(live)[order]
     out = np.full((n,), -1, np.int64)
-    # host-side dict lookup is fastest for exact key matching
-    lut = {}
-    for i, (h, l, m) in enumerate(zip(hh_hi, hh_lo, hh_mask)):
-        if m:
-            lut[(int(h) << 32) | int(l)] = i
+    if sorted_keys.size == 0:
+        return out
     for s in range(0, n, chunk):
         pts = jnp.asarray(points[s:s + chunk])
         khi, klo = quantize.points_to_keys(grid, pts)
         keys = (np.asarray(khi, np.uint64) << np.uint64(32)) | \
             np.asarray(klo, np.uint64)
-        out[s:s + chunk] = [lut.get(int(k), -1) for k in keys]
+        pos = np.minimum(np.searchsorted(sorted_keys, keys),
+                         sorted_keys.size - 1)
+        hit = sorted_keys[pos] == keys
+        out[s:s + chunk] = np.where(hit, sorted_ids[pos], -1)
     return out

@@ -1,11 +1,11 @@
-"""Vanilla (exact) tSNE in pure JAX — the paper's downstream embedder.
+"""tSNE in pure JAX — the paper's downstream embedder, three backends.
 
 Faithful to van der Maaten & Hinton 2008 + the reference implementation:
 
 * per-point perplexity calibration by binary search over sigma (fixed 50
-  iterations, vectorized over points),
+  iterations, vectorized over points, streamed in row blocks),
 * symmetrized joint P, early exaggeration, momentum + per-parameter gains,
-* exact O(N²) gradient  4·Σ_j (p_ij − q_ij)(y_i − y_j)/(1 + |y_i − y_j|²).
+* exact gradient  4·Σ_j (p_ij − q_ij)(y_i − y_j)/(1 + |y_i − y_j|²).
 
 Weighted extension (SnS): each input point carries a weight w_i (the HH
 count).  P is built from the weighted conditional probabilities, so a
@@ -13,12 +13,26 @@ representative standing for 10⁶ raw points pulls proportionally harder —
 this is the "replication" of paper §II-1 done in closed form (replicas
 are still supported; weights are the numerically-clean equivalent).
 
-The O(N²) pairwise kernels are the compute hot-spot; they are expressed
-as matmul-shaped ops (squared-distance via Gram matrix) so XLA maps them
-to the MXU.  ``repro.kernels.pairwise`` provides the Pallas-fused variant.
+Calibration never materializes an (N, N) matrix: it streams row blocks
+(``lax.map`` over chunks) and returns per-point sufficient statistics
+``PointStats`` — precision beta, a log-domain row shift, the shifted row
+normalizer zp, and the normalized point mass w.  Every backend rebuilds
+P_ij = ½(w_i·pc(j|i) + w_j·pc(i|j)) from these four numbers per point,
+flash-attention style.
 
-Sized for the paper's regime: N = 10⁴–2·10⁴ representatives. N=20k → 3.2 GB
-for the (N,N) float32 P/Q — fits one TPU core's HBM comfortably.
+Gradient backends (``TsneConfig.backend`` / ``run_tsne(backend=...)``):
+
+* ``"dense"``  — the classic matmul-shaped O(N²)-memory path.  Fastest at
+  the paper's N ≤ 2·10⁴ where the (N, N) buffers fit.
+* ``"tiled"``  — pure-XLA block streaming: both calibration and the
+  per-iteration gradient touch only (block, N) buffers, so N = 10⁵+
+  representatives fit on any host.  Works on CPU/GPU/TPU unchanged.
+* ``"pallas"`` — the fused two-pass Pallas kernel
+  (``repro.kernels.ops.tsne_step_fused``): Z reduction then force tiles,
+  recomputing P and Q on the fly in VMEM.  Interpret mode is selected
+  automatically off-TPU.
+
+All three agree to fp tolerance (tests/test_embed_backends.py).
 """
 from __future__ import annotations
 
@@ -29,6 +43,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+BACKENDS = ("dense", "tiled", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +60,23 @@ class TsneConfig:
     momentum_switch: int = 125
     min_gain: float = 0.01
     sigma_search_iters: int = 50
+    backend: str = "dense"         # "dense" | "tiled" | "pallas"
+    block: int = 512               # row-block for calibration / tiled / pallas
+
+
+class PointStats(NamedTuple):
+    """Per-point sufficient statistics for rebuilding P on the fly.
+
+    pc(j|i) = exp(−beta_i·d²(x_i, x_j) − shift_i) / zp_i   (0 on the diag),
+    P_ij    = ½ (w_i·pc(j|i) + w_j·pc(i|j)),   Σ_ij P_ij = 1.
+
+    ``shift`` is the per-row max logit (flash-style log-domain shift) so zp
+    never under/overflows regardless of the calibrated precision.
+    """
+    beta: jnp.ndarray    # (N,) precision 1/(2 sigma²)
+    shift: jnp.ndarray   # (N,) row max of −beta_i·d², subtracted pre-exp
+    zp: jnp.ndarray      # (N,) shifted row normalizer Σ_{j≠i} exp(logit−shift)
+    w: jnp.ndarray       # (N,) normalized point mass, Σ w = 1
 
 
 def pairwise_sq_dists(x: jnp.ndarray, y: Optional[jnp.ndarray] = None
@@ -56,60 +89,105 @@ def pairwise_sq_dists(x: jnp.ndarray, y: Optional[jnp.ndarray] = None
     return jnp.maximum(d, 0.0)
 
 
-def _cond_probs_and_entropy(neg_d: jnp.ndarray, beta: jnp.ndarray
-                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _pad_rows(x: jnp.ndarray, block: int, value=0) -> jnp.ndarray:
+    pad = (-x.shape[0]) % block
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _rows_probs_entropy(neg_d: jnp.ndarray, beta: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Row-wise conditional P and Shannon entropy for precision beta.
 
-    neg_d: (N, N) negative squared distances with -inf on the diagonal.
+    neg_d: (B, N) negative squared distances, −inf at invalid pairs.
     """
     logits = neg_d * beta[:, None]
     logits = logits - jnp.max(logits, axis=1, keepdims=True)
     p = jnp.exp(logits)
     p_sum = jnp.sum(p, axis=1, keepdims=True)
     p = p / p_sum
-    # H = -sum p log p, computed stably from logits
     logp = logits - jnp.log(p_sum)
     h = -jnp.sum(jnp.where(p > 0, p * logp, 0.0), axis=1)
     return p, h
 
 
-def calibrate_p(x: jnp.ndarray, perplexity: float,
-                weights: Optional[jnp.ndarray] = None,
-                search_iters: int = 50) -> jnp.ndarray:
-    """Joint symmetrized P with per-point sigma matched to the perplexity.
+def calibrate_stats(x: jnp.ndarray, perplexity: float,
+                    weights: Optional[jnp.ndarray] = None,
+                    search_iters: int = 50, block: int = 512) -> PointStats:
+    """Perplexity calibration in row blocks — peak memory O(block · N).
 
-    Binary search on beta = 1/(2 sigma²) per row, vectorized; fixed
-    iteration count keeps it jit-compatible.
+    Binary search on beta = 1/(2 sigma²) per row (fixed iteration count,
+    jit-compatible), streamed over row chunks with ``lax.map`` so no
+    (N, N) buffer ever exists.
     """
     n = x.shape[0]
-    d = pairwise_sq_dists(x)
-    neg_d = -d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    block = min(block, n) if n > 0 else block
+    xp = _pad_rows(x, block)
+    nb = xp.shape[0] // block
+    row_ids = jnp.arange(xp.shape[0])
+    col_ids = jnp.arange(n)
     target_h = jnp.log(perplexity)
 
-    def body(_, state):
-        beta, beta_lo, beta_hi = state
-        _, h = _cond_probs_and_entropy(neg_d, beta)
-        too_entropic = h > target_h        # entropy too high -> raise beta
-        beta_lo = jnp.where(too_entropic, beta, beta_lo)
-        beta_hi = jnp.where(too_entropic, beta_hi, beta)
-        beta_next = jnp.where(
-            jnp.isinf(beta_hi), beta * 2.0, 0.5 * (beta_lo + beta_hi))
-        return beta_next, beta_lo, beta_hi
+    def chunk_stats(args):
+        xc, idc = args                              # (B, D), (B,)
+        d2 = pairwise_sq_dists(xc, x)               # (B, N) — the only big temp
+        valid = idc[:, None] != col_ids[None, :]
+        neg_d = jnp.where(valid, -d2, -jnp.inf)
 
-    beta0 = jnp.ones((n,))
-    lo0 = jnp.zeros((n,))
-    hi0 = jnp.full((n,), jnp.inf)
-    beta, _, _ = jax.lax.fori_loop(0, search_iters, body, (beta0, lo0, hi0))
-    p_cond, _ = _cond_probs_and_entropy(neg_d, beta)
+        def body(_, state):
+            beta, lo, hi = state
+            _, h = _rows_probs_entropy(neg_d, beta)
+            too_entropic = h > target_h             # entropy high -> raise beta
+            lo = jnp.where(too_entropic, beta, lo)
+            hi = jnp.where(too_entropic, hi, beta)
+            nxt = jnp.where(jnp.isinf(hi), beta * 2.0, 0.5 * (lo + hi))
+            return nxt, lo, hi
 
+        init = (jnp.ones((block,)), jnp.zeros((block,)),
+                jnp.full((block,), jnp.inf))
+        beta, _, _ = jax.lax.fori_loop(0, search_iters, body, init)
+        logits = jnp.where(valid, -d2 * beta[:, None], -jnp.inf)
+        shift = jnp.max(logits, axis=1)
+        zp = jnp.sum(jnp.exp(logits - shift[:, None]), axis=1)
+        return beta, shift, zp
+
+    beta, shift, zp = jax.lax.map(
+        chunk_stats, (xp.reshape(nb, block, -1), row_ids.reshape(nb, block)))
+    beta = beta.reshape(-1)[:n]
+    shift = shift.reshape(-1)[:n]
+    zp = zp.reshape(-1)[:n]
     if weights is not None:
         w = weights / jnp.sum(weights)
-        # weighted symmetrization: P_ij ∝ w_i P(j|i) + w_j P(i|j)
-        p = w[:, None] * p_cond + (w[:, None] * p_cond).T
     else:
-        p = (p_cond + p_cond.T) / (2.0 * n)
+        w = jnp.full((n,), 1.0 / n)
+    return PointStats(beta=beta, shift=shift, zp=zp, w=w)
+
+
+def p_from_stats(x: jnp.ndarray, stats: PointStats) -> jnp.ndarray:
+    """Dense joint P from per-point stats (the O(N²) reconstruction)."""
+    n = x.shape[0]
+    d2 = pairwise_sq_dists(x)
+    pc = jnp.exp(-stats.beta[:, None] * d2 - stats.shift[:, None]) \
+        / stats.zp[:, None]
+    pc = pc.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    wpc = stats.w[:, None] * pc
+    p = 0.5 * (wpc + wpc.T)
     p = p / jnp.sum(p)
     return jnp.maximum(p, 1e-12)
+
+
+def calibrate_p(x: jnp.ndarray, perplexity: float,
+                weights: Optional[jnp.ndarray] = None,
+                search_iters: int = 50, block: int = 512) -> jnp.ndarray:
+    """Joint symmetrized P with per-point sigma matched to the perplexity.
+
+    Convenience wrapper (dense result) over the blocked ``calibrate_stats``.
+    """
+    stats = calibrate_stats(x, perplexity, weights=weights,
+                            search_iters=search_iters, block=block)
+    return p_from_stats(x, stats)
 
 
 def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -122,7 +200,7 @@ def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
 
 def _grad_and_kl(p: jnp.ndarray, y: jnp.ndarray
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact tSNE gradient (matmul form) + current KL."""
+    """Exact tSNE gradient (matmul form) + current KL — dense backend."""
     n = y.shape[0]
     num = 1.0 / (1.0 + pairwise_sq_dists(y))                 # (N, N)
     num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)
@@ -135,20 +213,117 @@ def _grad_and_kl(p: jnp.ndarray, y: jnp.ndarray
     return grad, kl
 
 
+def _tiled_grad_kl(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
+                   exaggeration: jnp.ndarray, n_valid: int, block: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-streamed gradient + KL: peak memory O(block · N).
+
+    All inputs padded to a multiple of ``block`` (padded rows carry w = 0
+    and are masked out of every pair).  Two passes, like the Pallas
+    kernel: Z is a global reduction that must precede the force weighting.
+    """
+    npad, dims = y.shape
+    nb = npad // block
+    ids = jnp.arange(npad)
+    col_live = ids[None, :] < n_valid
+
+    def pair_mask(idc):
+        return (idc[:, None] != ids[None, :]) & \
+            (idc[:, None] < n_valid) & col_live
+
+    def z_chunk(args):
+        yc, idc = args
+        num = 1.0 / (1.0 + pairwise_sq_dists(yc, y))
+        return jnp.sum(jnp.where(pair_mask(idc), num, 0.0))
+
+    chunks_y = y.reshape(nb, block, dims)
+    chunks_id = ids.reshape(nb, block)
+    z = jnp.sum(jax.lax.map(z_chunk, (chunks_y, chunks_id)))
+
+    beta, shift, zp, w = stats
+
+    def force_chunk(args):
+        xc, yc, bc, mc, zc, wc, idc = args
+        mask = pair_mask(idc)
+        d2x = pairwise_sq_dists(xc, x)
+        pc_ij = jnp.exp(-bc[:, None] * d2x - mc[:, None]) / zc[:, None]
+        pc_ji = jnp.exp(-beta[None, :] * d2x - shift[None, :]) / zp[None, :]
+        p = jnp.where(mask, 0.5 * (wc[:, None] * pc_ij + w[None, :] * pc_ji),
+                      0.0)
+        num = 1.0 / (1.0 + pairwise_sq_dists(yc, y))
+        num = jnp.where(mask, num, 0.0)
+        q = num / z
+        pe = exaggeration * p
+        pq = (pe - q) * num
+        f = 4.0 * (jnp.sum(pq, axis=1, keepdims=True) * yc - pq @ y)
+        # KL partials: Σ pe log pe and Σ pe log num (q = num/Z folds in later)
+        a = jnp.sum(jnp.where(pe > 0, pe * jnp.log(jnp.maximum(pe, 1e-37)),
+                              0.0))
+        b = jnp.sum(jnp.where(pe > 0, pe * jnp.log(jnp.maximum(num, 1e-37)),
+                              0.0))
+        return f, a, b
+
+    xs = (x.reshape(nb, block, -1), chunks_y,
+          beta.reshape(nb, block), shift.reshape(nb, block),
+          zp.reshape(nb, block), w.reshape(nb, block), chunks_id)
+    f, a, b = jax.lax.map(force_chunk, xs)
+    kl = jnp.sum(a) - jnp.sum(b) + exaggeration * jnp.log(z)
+    return f.reshape(npad, dims), kl
+
+
+def embedding_grad(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
+                   exaggeration=1.0, *, backend: str = "tiled",
+                   block: int = 512, interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One tSNE gradient evaluation on any backend — test/bench surface.
+
+    Returns (grad (N, dims), KL of the exaggerated P against current Q).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    exaggeration = jnp.asarray(exaggeration, jnp.float32)
+    if backend == "dense":
+        return _grad_and_kl(p_from_stats(x, stats) * exaggeration, y)
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.tsne_step_fused(
+            x, y, stats.beta, stats.zp, shift=stats.shift, weights=stats.w,
+            exaggeration=exaggeration, block=min(block, x.shape[0]),
+            interpret=interpret, return_kl=True)
+    n = x.shape[0]
+    block = min(block, n)
+    pad = functools.partial(_pad_rows, block=block)
+    spad = PointStats(beta=pad(stats.beta), shift=pad(stats.shift),
+                      zp=pad(stats.zp, value=1), w=pad(stats.w))
+    f, kl = _tiled_grad_kl(pad(x), pad(y), spad, exaggeration,
+                           n_valid=n, block=block)
+    return f[:n], kl
+
+
 class TsneState(NamedTuple):
     y: jnp.ndarray
     velocity: jnp.ndarray
     gains: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
-             weights: Optional[jnp.ndarray] = None
-             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full tSNE: returns (embedding (N, dims), KL trace (n_iter,))."""
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "interpret"))
+def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
+              backend: str, interpret: bool
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n = x.shape[0]
-    p = calibrate_p(x, cfg.perplexity, weights=weights,
-                    search_iters=cfg.sigma_search_iters)
+    stats = calibrate_stats(x, cfg.perplexity, weights=weights,
+                            search_iters=cfg.sigma_search_iters,
+                            block=cfg.block)
+    if backend == "dense":
+        p = p_from_stats(x, stats)
+
+        def grad_fn(y, exag):
+            return _grad_and_kl(p * exag, y)
+    else:
+        def grad_fn(y, exag):
+            return embedding_grad(x, y, stats, exag, backend=backend,
+                                  block=cfg.block, interpret=interpret)
+
     y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
     state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
                       gains=jnp.ones_like(y0))
@@ -159,7 +334,7 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
                          cfg.early_exaggeration, 1.0)
         mom = jnp.where(i < cfg.momentum_switch,
                         cfg.momentum_start, cfg.momentum_final)
-        grad, kl = _grad_and_kl(p * exag, state.y)
+        grad, kl = grad_fn(state.y, exag)
         same_sign = jnp.sign(grad) == jnp.sign(state.velocity)
         gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
         gains = jnp.maximum(gains, cfg.min_gain)
@@ -171,3 +346,20 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
     state, kls = jax.lax.fori_loop(
         0, cfg.n_iter, step, (state, jnp.zeros((cfg.n_iter,))))
     return state.y, kls
+
+
+def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
+             weights: Optional[jnp.ndarray] = None,
+             backend: Optional[str] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full tSNE: returns (embedding (N, dims), KL trace (n_iter,)).
+
+    ``backend`` overrides ``cfg.backend``; Pallas interpret mode is
+    auto-selected off-TPU.
+    """
+    backend = backend or cfg.backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    interpret = jax.default_backend() != "tpu"
+    return _run_tsne(key, x, weights, cfg=cfg, backend=backend,
+                     interpret=interpret)

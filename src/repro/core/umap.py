@@ -46,6 +46,7 @@ class UmapConfig:
     neg_rate: int = 5
     init_scale: float = 10.0
     sigma_search_iters: int = 50
+    block: int = 4096              # kNN row-block; N <= block -> dense path
 
 
 def fit_ab(spread: float, min_dist: float) -> Tuple[float, float]:
@@ -62,34 +63,82 @@ def fit_ab(spread: float, min_dist: float) -> Tuple[float, float]:
     return float(a), float(b)
 
 
-def knn_graph(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k))."""
+def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
+
+    With ``block`` set (and < N) the distance matrix is streamed in row
+    chunks of that size — peak memory O(block · N), never (N, N).
+    """
     n = x.shape[0]
-    d = pairwise_sq_dists(x)
-    d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
-    neg_top, idx = jax.lax.top_k(-d, k)
-    return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+    if block is None or block >= n:
+        d = pairwise_sq_dists(x)
+        d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+        neg_top, idx = jax.lax.top_k(-d, k)
+        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, pad), (0, 0)]) if pad else x
+    nb = xp.shape[0] // block
+    row_ids = jnp.arange(xp.shape[0])
+    col_ids = jnp.arange(n)
+
+    def chunk(args):
+        xc, idc = args
+        d = pairwise_sq_dists(xc, x)                       # (B, N)
+        d = jnp.where(idc[:, None] == col_ids[None, :], jnp.inf, d)
+        neg_top, idx = jax.lax.top_k(-d, k)
+        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+
+    idx, dist = jax.lax.map(
+        chunk, (xp.reshape(nb, block, -1), row_ids.reshape(nb, block)))
+    return idx.reshape(-1, k)[:n], dist.reshape(-1, k)[:n]
+
+
+def _reverse_membership(knn_idx: jnp.ndarray, memb: jnp.ndarray,
+                        rows: jnp.ndarray, cols: jnp.ndarray,
+                        vals: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Membership of each directed edge's reverse (0 if absent) — sparse.
+
+    Sort-based: pack each edge (i, j) into a scalar key, sort once, and
+    binary-search every reverse key (j, i).  E log E work, O(E) memory —
+    no (N, N) temp.  Keys fit uint32 iff N ≤ 2¹⁶; beyond that we fall back
+    to a gather: the reverse of (i, j) can only live in j's kNN row, so
+    compare knn_idx[j] against i (E·k work, still sparse).
+    """
+    e = rows.shape[0]
+    if n <= (1 << 16):
+        n32 = jnp.uint32(n)
+        fwd = rows.astype(jnp.uint32) * n32 + cols.astype(jnp.uint32)
+        rev = cols.astype(jnp.uint32) * n32 + rows.astype(jnp.uint32)
+        order = jnp.argsort(fwd)
+        sorted_keys = fwd[order]
+        sorted_vals = vals[order]
+        pos = jnp.minimum(jnp.searchsorted(sorted_keys, rev), e - 1)
+        hit = sorted_keys[pos] == rev
+        return jnp.where(hit, sorted_vals[pos], 0.0)
+    rev_rows = knn_idx[cols]                               # (E, k)
+    rev_vals = memb[cols]                                  # (E, k)
+    match = rev_rows == rows[:, None]
+    return jnp.sum(jnp.where(match, rev_vals, 0.0), axis=1)
 
 
 def fuzzy_simplicial_set(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
                          weights: Optional[jnp.ndarray] = None,
-                         search_iters: int = 50
+                         search_iters: int = 50,
+                         symmetrize: str = "sparse"
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Memberships on the kNN edges + symmetrized graph.
 
-    Returns (edges (E,2) int32, membership (E,) float32) with E = 2·N·k
-    (each directed edge and its reverse; symmetrization by t-conorm)."""
+    Returns (edges (E,2) int32, membership (E,) float32) with E = N·k
+    (each directed edge; symmetrization by the probabilistic t-conorm
+    a ⊕ a' = a + a' − a·a').  ``symmetrize="sparse"`` (default) matches
+    reverse edges by sorted-key binary search — no (N, N) temp;
+    ``"dense"`` keeps the scatter-max reference path for small N."""
     n, k = knn_idx.shape
     rho = knn_dist[:, 0]
     target = jnp.log2(float(k))
 
-    def body(_, sig):
-        d = jnp.maximum(knn_dist - rho[:, None], 0.0)
-        s = jnp.sum(jnp.exp(-d / sig[:, None]), axis=1)
-        return jnp.where(s > target, sig * 0.5, sig * 2.0)
-
-    # coarse doubling search then bisection
-    sig = jnp.ones((n,))
     lo = jnp.full((n,), 1e-6)
     hi = jnp.full((n,), 1e6)
 
@@ -112,12 +161,16 @@ def fuzzy_simplicial_set(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
     rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
     cols = knn_idx.reshape(-1).astype(jnp.int32)
     vals = memb.reshape(-1)
-    # symmetrize: build dense lookup of reverse membership via scatter-max
-    # (kNN graphs are sparse but N ≤ 2e4 so an (N,N) temp is acceptable;
-    #  for larger N swap in a sort-based sparse symmetrization)
-    dense = jnp.zeros((n, n)).at[rows, cols].max(vals)
-    sym = dense + dense.T - dense * dense.T
-    edge_vals = sym[rows, cols]
+    if symmetrize == "sparse":
+        rev = _reverse_membership(knn_idx, memb, rows, cols, vals, n)
+        edge_vals = vals + rev - vals * rev
+    elif symmetrize == "dense":
+        # reference path: dense lookup of reverse membership via scatter-max
+        dense = jnp.zeros((n, n)).at[rows, cols].max(vals)
+        sym = dense + dense.T - dense * dense.T
+        edge_vals = sym[rows, cols]
+    else:
+        raise ValueError(f"unknown symmetrize {symmetrize!r}")
     edges = jnp.stack([rows, cols], axis=1)
     return edges, edge_vals
 
@@ -171,8 +224,11 @@ def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
 
 def run_umap(key: jax.Array, x: jnp.ndarray, cfg: UmapConfig,
              weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Full UMAP: kNN → fuzzy set → SGD embed.  Returns (N, dims)."""
-    idx, dist = knn_graph(x, cfg.n_neighbors)
+    """Full UMAP: kNN → fuzzy set → SGD embed.  Returns (N, dims).
+
+    Every stage is memory-bounded: kNN streams ``cfg.block`` rows at a
+    time, and symmetrization is sparse — no (N, N) buffer at any N."""
+    idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block)
     edges, memb = fuzzy_simplicial_set(idx, dist, weights=weights,
                                        search_iters=cfg.sigma_search_iters)
     return optimize_embedding(key, edges, memb, x.shape[0], cfg)

@@ -92,17 +92,38 @@ def sketch_estimate_mxu(sk: CountSketch, key_hi: jnp.ndarray,
 
 
 def tsne_step_fused(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
-                    zp: jnp.ndarray, *, exaggeration: float = 1.0,
-                    block: int = 256, interpret: bool = True
-                    ) -> jnp.ndarray:
-    """One fused tSNE gradient: pass-1 Z reduction + pass-2 force tiles."""
+                    zp: jnp.ndarray, *, shift: Optional[jnp.ndarray] = None,
+                    weights: Optional[jnp.ndarray] = None,
+                    exaggeration=1.0, block: int = 256,
+                    interpret: Optional[bool] = None,
+                    return_kl: bool = False):
+    """One fused tSNE gradient: pass-1 Z reduction + pass-2 force tiles.
+
+    ``shift`` is the per-row log-domain shift paired with ``zp`` (None =
+    unshifted zp, the legacy convention); ``weights`` the normalized point
+    masses (None = uniform 1/N, the classic symmetrization).  Exaggeration
+    may be a traced scalar.  ``interpret`` None auto-selects by platform.
+    With ``return_kl`` also returns the KL of exag·P against current Q.
+    """
     n = x.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = jnp.zeros((n,), jnp.float32) if shift is None else shift
+    w = jnp.full((n,), 1.0 / n, jnp.float32) if weights is None \
+        else weights / jnp.sum(weights)
+    stats = jnp.stack([beta.astype(jnp.float32), m.astype(jnp.float32),
+                       zp.astype(jnp.float32), w.astype(jnp.float32)], axis=1)
     xpad, _ = _pad_to(x, block)
     ypad, _ = _pad_to(y, block)
-    bpad, _ = _pad_to(beta, block)
-    zppad, _ = _pad_to(zp, block, value=1)     # avoid 0-div on padding
+    spad = jnp.pad(stats, [(0, (-n) % block), (0, 0)])
+    # padded rows: zp=1 avoids 0-div, w=0 removes them from P
+    if (-n) % block:
+        spad = spad.at[n:, 2].set(1.0)
     z = _tf.tsne_z(ypad, block=block, n_valid=n, interpret=interpret)
-    f = _tf.tsne_forces(xpad, ypad, bpad, zppad, z, block=block,
-                        n_valid=n, exaggeration=exaggeration,
-                        interpret=interpret)
-    return f[:n]
+    exag = jnp.asarray(exaggeration, jnp.float32)
+    f, kl_parts = _tf.tsne_forces(xpad, ypad, spad, z, exag, block=block,
+                                  n_valid=n, interpret=interpret)
+    if not return_kl:
+        return f[:n]
+    kl = kl_parts[0, 0] - kl_parts[0, 1] + exag * jnp.log(z)
+    return f[:n], kl

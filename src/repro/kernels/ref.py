@@ -66,20 +66,28 @@ def tsne_z(y: jnp.ndarray) -> jnp.ndarray:
 
 def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
                 zp: jnp.ndarray, z: jnp.ndarray,
-                exaggeration: float = 1.0) -> jnp.ndarray:
+                exaggeration: float = 1.0,
+                shift: Optional[jnp.ndarray] = None,
+                weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Fused-tSNE oracle: gradient with P recomputed on the fly from the
     high-dim points.
 
-    p_cond(j|i) = exp(-beta_i d2x_ij) / zp_i  (zp excludes the diagonal),
-    P = (p_cond + p_cond^T) / 2N,  q = num/z,  grad_i = 4 sum_j (exag*P-q)
+    p_cond(j|i) = exp(-beta_i d2x_ij - shift_i) / zp_i  (zp excludes the
+    diagonal; shift defaults to 0, the unshifted-zp convention),
+    P = (w_i p_cond + w_j p_cond^T) / 2 (uniform w = 1/N -> classic
+    (pc + pc^T)/2N),  q = num/z,  grad_i = 4 sum_j (exag*P-q)
     * num * (y_i - y_j).
     """
     n = x.shape[0]
+    m = jnp.zeros((n,)) if shift is None else shift
+    w = jnp.full((n,), 1.0 / n) if weights is None \
+        else weights / jnp.sum(weights)
     d2x = jnp.sum(x * x, 1)[:, None] - 2 * (x @ x.T) + jnp.sum(x * x, 1)[None]
     d2x = jnp.maximum(d2x, 0.0)
-    pc = jnp.exp(-beta[:, None] * d2x) / zp[:, None]
+    pc = jnp.exp(-beta[:, None] * d2x - m[:, None]) / zp[:, None]
     pc = pc.at[jnp.arange(n), jnp.arange(n)].set(0.0)
-    p = (pc + pc.T) / (2.0 * n)
+    wpc = w[:, None] * pc
+    p = 0.5 * (wpc + wpc.T)
     d2y = jnp.sum(y * y, 1)[:, None] - 2 * (y @ y.T) + jnp.sum(y * y, 1)[None]
     num = 1.0 / (1.0 + jnp.maximum(d2y, 0.0))
     num = num.at[jnp.arange(n), jnp.arange(n)].set(0.0)

@@ -5,8 +5,9 @@ Exact tSNE materializes three (N, N) matrices per iteration (P, Q, and
 HBM traffic per iteration; beyond N ≈ 10⁵ it stops fitting entirely.  This
 kernel *never materializes any N×N matrix*: like flash attention, it
 streams (Bi × Bj) tiles, recomputing both the high-dim affinity P (from
-the calibrated per-point precisions beta and row normalizers zp) and the
-low-dim kernel Q on the fly, accumulating forces tile-by-tile in VMEM.
+the calibrated per-point statistics beta / shift / zp / w — see
+``repro.core.tsne.PointStats``) and the low-dim kernel Q on the fly,
+accumulating forces tile-by-tile in VMEM.
 
 Two passes per iteration (Z is a global reduction that must precede the
 force weighting — same structure as flash attention's softmax statistics):
@@ -14,10 +15,18 @@ force weighting — same structure as flash attention's softmax statistics):
     pass 1 (``tsne_z``):       Z = Σ_{i≠j} 1/(1+|y_i−y_j|²)
     pass 2 (``tsne_forces``):  F_i = 4 Σ_j (exag·P_ij − num_ij/Z)·num_ij·(y_i−y_j)
 
-Both are (N/B)² tile grids; all matmuls (x_i·x_jᵀ, pq·y_j) hit the MXU.
-HBM traffic drops from O(N²) to O(N²·D/B) — with B = 512, D ≤ 10, that is
-a ≥ 50× reduction, turning the embedder from memory-bound to compute-bound
-(see EXPERIMENTS.md §Perf for the roofline arithmetic).
+with the weighted symmetrization  P_ij = ½ (w_i·pc(j|i) + w_j·pc(i|j)),
+pc(j|i) = exp(−beta_i·d²x_ij − shift_i)/zp_i.  Uniform w_i = 1/N recovers
+the classic (pc + pcᵀ)/2N.  ``shift`` is the flash-style log-domain row
+shift that keeps the recomputed exponentials in range.  Exaggeration and
+Z arrive as traced scalars so the kernel can live inside a ``fori_loop``
+without retracing per phase.  Pass 2 also accumulates the two KL partial
+sums Σ pe·log pe and Σ pe·log num so the optimizer gets the loss for free.
+
+Both passes are (N/B)² tile grids; all matmuls (x_i·x_jᵀ, pq·y_j) hit the
+MXU.  HBM traffic drops from O(N²) to O(N²·D/B) — with B = 512, D ≤ 10,
+that is a ≥ 50× reduction, turning the embedder from memory-bound to
+compute-bound (see EXPERIMENTS.md §Perf for the roofline arithmetic).
 """
 from __future__ import annotations
 
@@ -55,29 +64,41 @@ def _z_kernel(y_i_ref, y_j_ref, z_ref, *, block: int, n_valid: int):
     z_ref[0, 0] += jnp.sum(jnp.where(mask, num, 0.0))
 
 
-def _force_kernel(x_i_ref, x_j_ref, y_i_ref, y_j_ref, beta_i_ref,
-                  beta_j_ref, zp_i_ref, zp_j_ref, z_ref, out_ref,
-                  *, block: int, n_valid: int, exaggeration: float):
+def _force_kernel(x_i_ref, x_j_ref, y_i_ref, y_j_ref, s_i_ref, s_j_ref,
+                  scal_ref, out_ref, kl_ref, *, block: int, n_valid: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init_kl():
+        kl_ref[...] = jnp.zeros_like(kl_ref)
+
     mask = _pair_mask(pl.program_id(0), pl.program_id(1), block, n_valid)
+    s_i = s_i_ref[...]                       # (Bi, 4): beta, shift, zp, w
+    s_j = s_j_ref[...]                       # (Bj, 4)
     # high-dim affinity, recomputed on the fly (never stored)
     d2x = _sq_dists(x_i_ref[...], x_j_ref[...])
-    pc_ij = jnp.exp(-beta_i_ref[...] * d2x) / zp_i_ref[...]        # (Bi,Bj)
-    pc_ji = jnp.exp(-beta_j_ref[...].T * d2x) / zp_j_ref[...].T
-    p = jnp.where(mask, (pc_ij + pc_ji) / (2.0 * n_valid), 0.0)
+    pc_ij = jnp.exp(-s_i[:, 0:1] * d2x - s_i[:, 1:2]) / s_i[:, 2:3]
+    pc_ji = jnp.exp(-s_j[:, 0][None, :] * d2x - s_j[:, 1][None, :]) \
+        / s_j[:, 2][None, :]
+    p = jnp.where(
+        mask, 0.5 * (s_i[:, 3:4] * pc_ij + s_j[:, 3][None, :] * pc_ji), 0.0)
     # low-dim kernel
     y_i = y_i_ref[...]
     y_j = y_j_ref[...]
     num = 1.0 / (1.0 + _sq_dists(y_i, y_j))
     num = jnp.where(mask, num, 0.0)
-    q = num / z_ref[0, 0]
-    pq = (exaggeration * p - q) * num
+    q = num / scal_ref[0, 0]
+    pe = scal_ref[0, 1] * p                  # exaggerated P
+    pq = (pe - q) * num
     out_ref[...] += 4.0 * (
         jnp.sum(pq, axis=1, keepdims=True) * y_i
         - jnp.dot(pq, y_j, preferred_element_type=jnp.float32))
+    kl_ref[0, 0] += jnp.sum(
+        jnp.where(pe > 0, pe * jnp.log(jnp.maximum(pe, 1e-37)), 0.0))
+    kl_ref[0, 1] += jnp.sum(
+        jnp.where(pe > 0, pe * jnp.log(jnp.maximum(num, 1e-37)), 0.0))
 
 
 @functools.partial(jax.jit, static_argnames=("block", "n_valid", "interpret"))
@@ -102,41 +123,48 @@ def tsne_z(y: jnp.ndarray, *, block: int = 256, n_valid: int = None,
     return z[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "block", "n_valid", "exaggeration", "interpret"))
-def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
-                zp: jnp.ndarray, z: jnp.ndarray, *, block: int = 256,
-                n_valid: int = None, exaggeration: float = 1.0,
-                interpret: bool = True) -> jnp.ndarray:
-    """Fused tSNE gradient.  x (N, Dh), y (N, dims), beta/zp (N,), z scalar.
+@functools.partial(jax.jit, static_argnames=("block", "n_valid", "interpret"))
+def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, stats: jnp.ndarray,
+                z: jnp.ndarray, exaggeration: jnp.ndarray, *,
+                block: int = 256, n_valid: int = None,
+                interpret: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused tSNE gradient + KL partials.
 
-    N must be a multiple of ``block`` (ops.py pads; padded rows produce
-    zero force and are masked out of every pair).
+    x (N, Dh), y (N, dims), stats (N, 4) = [beta, shift, zp, w] columns,
+    z / exaggeration traced scalars.  N must be a multiple of ``block``
+    (ops.py pads; padded rows carry w = 0, produce zero force, and are
+    masked out of every pair).
+
+    Returns (forces (N, dims), kl_parts (1, 2)) with
+    kl_parts = [Σ pe·log pe, Σ pe·log num] over valid pairs, pe = exag·P.
     """
     n = x.shape[0]
     n_valid = n if n_valid is None else n_valid
     assert n % block == 0
     nb = n // block
-    beta2 = beta[:, None]
-    zp2 = zp[:, None]
-    zmat = jnp.reshape(z, (1, 1)).astype(jnp.float32)
+    scal = jnp.stack([z.astype(jnp.float32),
+                      jnp.asarray(exaggeration, jnp.float32)]).reshape(1, 2)
 
     return pl.pallas_call(
-        functools.partial(_force_kernel, block=block, n_valid=n_valid,
-                          exaggeration=float(exaggeration)),
+        functools.partial(_force_kernel, block=block, n_valid=n_valid),
         grid=(nb, nb),
         in_specs=[
             pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
             pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
             pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
             pl.BlockSpec((block, y.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
-            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, y.shape[1]), jnp.float32),
+        out_specs=(
+            pl.BlockSpec((block, y.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, y.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ),
         interpret=interpret,
-    )(x, x, y, y, beta2, beta2, zp2, zp2, zmat)
+    )(x, x, y, y, stats, stats, scal)

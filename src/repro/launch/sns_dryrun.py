@@ -16,7 +16,6 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
-import functools
 import json
 import time
 
@@ -26,6 +25,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import candidates as cand_mod
+from repro.core import geo
 from repro.core import heavy_hitters as hh_mod
 from repro.core import quantize, sketch as sketch_mod
 from repro.core.quantize import GridSpec
@@ -61,9 +61,8 @@ def main() -> None:
     upd = sketch_mod.update_sorted if args.update == "sorted" \
         else sketch_mod.update
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P(), P(data_axes)),
-        out_specs=(P(), P()), check_vma=False)
+    @geo.shard_map_compat(mesh=mesh, in_specs=(P(), P(data_axes)),
+                          out_specs=(P(), P()))
     def spmd(sk, pts):
         key_hi, key_lo = quantize.points_to_keys(grid, pts)
         sk_local = upd(sk, key_hi, key_lo)

@@ -34,6 +34,7 @@ def _mixture(n, seed=0, dims=4, n_clusters=3, background_frac=0.3):
     return jnp.asarray(pts[perm]), labels[perm], centers
 
 
+@pytest.mark.slow
 def test_sns_end_to_end_umap():
     pts, labels, centers = _mixture(40_000, seed=0)
     cfg = pipeline.SnsConfig(bins=16, rows=8, log2_cols=12, top_k=256,
@@ -50,6 +51,7 @@ def test_sns_end_to_end_umap():
     assert res.coverage > 0.4
 
 
+@pytest.mark.slow
 def test_sns_end_to_end_tsne():
     pts, labels, centers = _mixture(20_000, seed=1)
     cfg = pipeline.SnsConfig(bins=12, rows=8, log2_cols=12, top_k=128,
@@ -86,3 +88,41 @@ def test_assign_points_to_hh():
     assert in_hh.mean() > 0.3
     # cluster points should be assigned far more often than background
     assert in_hh[labels >= 0].mean() > 2.0 * max(in_hh[labels < 0].mean(), 0.01)
+
+
+def test_assign_points_to_hh_matches_dict_lookup():
+    """The searchsorted fast path must agree with the per-point dict oracle."""
+    from repro.core import quantize
+    pts, _, _ = _mixture(10_000, seed=5)
+    cfg = pipeline.SnsConfig(bins=12, rows=8, log2_cols=12, top_k=128)
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    got = pipeline.assign_points_to_hh(grid, hh, np.asarray(pts), chunk=3000)
+    # oracle: the old host-side dict implementation
+    lut = {}
+    for i, (h, l, m) in enumerate(zip(np.asarray(hh.key_hi),
+                                      np.asarray(hh.key_lo),
+                                      np.asarray(hh.mask))):
+        if m:
+            lut[(int(h) << 32) | int(l)] = i
+    khi, klo = quantize.points_to_keys(grid, pts)
+    keys = (np.asarray(khi, np.uint64) << np.uint64(32)) | \
+        np.asarray(klo, np.uint64)
+    want = np.asarray([lut.get(int(k), -1) for k in keys])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_coverage_one_when_every_cell_heavy():
+    """A stream whose every occupied cell is a heavy hitter -> coverage 1."""
+    rng = np.random.default_rng(7)
+    # 6 well-separated cell centers, many points each: 6 distinct keys
+    centers = np.stack(np.meshgrid([0.1, 0.5, 0.9], [0.25, 0.75]),
+                       -1).reshape(-1, 2)
+    pts = np.repeat(centers, 500, axis=0).astype(np.float32)
+    pts += 0.001 * rng.normal(size=pts.shape).astype(np.float32)
+    perm = rng.permutation(len(pts))
+    cfg = pipeline.SnsConfig(bins=8, rows=8, log2_cols=12, top_k=16,
+                             max_replicas=2, embedder="umap")
+    from repro.core.umap import UmapConfig
+    res = pipeline.run(cfg, jnp.asarray(pts[perm]),
+                       umap_cfg=UmapConfig(n_neighbors=5, n_epochs=10))
+    assert res.coverage == pytest.approx(1.0, rel=1e-6)

@@ -1,7 +1,7 @@
 """Property tests: u64 limb arithmetic must match numpy uint64 exactly."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import u64
 

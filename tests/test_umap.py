@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import umap
 
@@ -48,6 +49,7 @@ def test_fuzzy_set_properties():
     assert min(strong.values()) > 0.9
 
 
+@pytest.mark.slow
 def test_umap_blobs_separate():
     x, labels = _blobs(40, [[0, 0, 0], [5, 5, 5], [-5, 5, 0]], seed=2)
     cfg = umap.UmapConfig(n_neighbors=10, n_epochs=150)
