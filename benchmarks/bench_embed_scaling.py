@@ -28,40 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+# peak_buffer_bytes / iter_jaxpr_avals moved to benchmarks.common (shared
+# with bench_ingest_scaling); re-exported here for callers of this module.
+from benchmarks.common import (iter_jaxpr_avals,  # noqa: F401
+                               peak_buffer_bytes, time_fn)
 from repro.core import tsne, umap
 from repro.core.tsne import PointStats
-
-
-def iter_jaxpr_avals(jaxpr):
-    """Yield every intermediate abstract value in a jaxpr, recursively."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            if hasattr(v, "aval"):
-                yield v.aval
-        for p in eqn.params.values():
-            for sub in _sub_jaxprs(p):
-                yield from iter_jaxpr_avals(sub)
-
-
-def _sub_jaxprs(param):
-    vals = param if isinstance(param, (list, tuple)) else [param]
-    for v in vals:
-        if hasattr(v, "jaxpr"):          # ClosedJaxpr
-            yield v.jaxpr
-        elif hasattr(v, "eqns"):         # raw Jaxpr
-            yield v
-
-
-def peak_buffer_bytes(fn, *args) -> int:
-    """Largest single intermediate of fn(*args), from the jaxpr (static)."""
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    best = 0
-    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
-        if hasattr(aval, "shape") and hasattr(aval, "dtype"):
-            best = max(best, int(np.prod(aval.shape, dtype=np.int64))
-                       * aval.dtype.itemsize)
-    return best
 
 
 def _synthetic_stats(n: int, rng) -> PointStats:

@@ -1,10 +1,44 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, static jaxpr
+peak-buffer measurement (used by the scaling benches to report memory
+trajectories past the point where allocation would OOM)."""
 from __future__ import annotations
 
 import time
 from typing import Callable, List
 
 import jax
+import numpy as np
+
+
+def iter_jaxpr_avals(jaxpr):
+    """Yield every intermediate abstract value in a jaxpr, recursively."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval"):
+                yield v.aval
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                yield from iter_jaxpr_avals(sub)
+
+
+def _sub_jaxprs(param):
+    vals = param if isinstance(param, (list, tuple)) else [param]
+    for v in vals:
+        if hasattr(v, "jaxpr"):          # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):         # raw Jaxpr
+            yield v
+
+
+def peak_buffer_bytes(fn, *args) -> int:
+    """Largest single intermediate of fn(*args), from the jaxpr (static)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    best = 0
+    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
+        if hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            best = max(best, int(np.prod(aval.shape, dtype=np.int64))
+                       * aval.dtype.itemsize)
+    return best
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

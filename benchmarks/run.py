@@ -10,6 +10,8 @@ Emits CSV blocks (name, value, paper reference) for:
   * collision_model      — paper §III-2 (grid-resolution guidance)
   * pipeline_quality     — paper §IV-1 (contingency-table analog)
   * kernel_paths         — update/estimate implementation comparison
+  * embed_scaling        — tiled vs dense embedding memory/time vs N
+  * ingest_scaling       — streaming vs one-shot sketch-stage memory vs N
 """
 from __future__ import annotations
 
@@ -28,7 +30,8 @@ def main() -> None:
     from benchmarks import (bench_sketch_scaling, bench_error_vs_rank,
                             bench_hh_vs_sampling, bench_coverage,
                             bench_collision_model, bench_pipeline_quality,
-                            bench_kernels, bench_embed_scaling)
+                            bench_kernels, bench_embed_scaling,
+                            bench_ingest_scaling)
     n_scale = 200_000 if args.fast else 2_000_000
     n_mid = 100_000 if args.fast else 1_000_000
     n_small = 60_000 if args.fast else 300_000
@@ -45,6 +48,11 @@ def main() -> None:
             else (8192, 16384, 32768, 65536),
             dense_max=8192 if args.fast else 16384,
             iters=1 if args.fast else 2)),
+        ("ingest_scaling", lambda: bench_ingest_scaling.run(
+            sizes=(8192, 32768) if args.fast
+            else (8192, 65536, 262144, 1048576),
+            chunk=4096 if args.fast else 8192,
+            oneshot_time_max=32768 if args.fast else 262144)),
     ]
     for name, fn in jobs:
         if args.only and args.only != name:

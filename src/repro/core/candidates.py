@@ -20,12 +20,33 @@ import jax
 import jax.numpy as jnp
 
 
+INVALID_KEY = 0xFFFFFFFF
+
+
 class Candidates(NamedTuple):
     """Top-L locally-frequent keys of one shard (padded, mask-carrying)."""
     key_hi: jnp.ndarray    # (L,) uint32
     key_lo: jnp.ndarray    # (L,) uint32
     count: jnp.ndarray     # (L,) float32 — exact local count
     mask: jnp.ndarray      # (L,) bool — False for padding
+
+    @property
+    def capacity(self) -> int:
+        """Reservoir size L (static)."""
+        return self.key_hi.shape[0]
+
+    def merge_topk(self, other: "Candidates", k: int) -> "Candidates":
+        """Reservoir merge: see :func:`merge_topk`."""
+        return merge_topk(self, other, k=k)
+
+
+def empty(k: int) -> Candidates:
+    """An all-padding candidate reservoir of capacity k (merge identity)."""
+    return Candidates(
+        key_hi=jnp.full((k,), INVALID_KEY, jnp.uint32),
+        key_lo=jnp.full((k,), INVALID_KEY, jnp.uint32),
+        count=jnp.zeros((k,), jnp.float32),
+        mask=jnp.zeros((k,), bool))
 
 
 def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
@@ -35,6 +56,10 @@ def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
 
     sort (TPU-native bitonic) → run-length segments → segment_sum →
     top_k.  O(n log n) work, fully vectorized, static shapes.
+
+    ``k`` may exceed the number of items n (e.g. a small chunk against a
+    large candidate pool): the selection is clamped to n and the output is
+    padded to k with invalid keys + mask=False.
     """
     n = key_hi.shape[0]
     v = jnp.ones((n,), jnp.float32) if values is None \
@@ -55,13 +80,18 @@ def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
     # masked-out inputs can form runs with sum 0 — drop them too
     live &= run_sum > 0
     score = jnp.where(live, run_sum, -jnp.inf)
-    top_score, top_idx = jax.lax.top_k(score, k)
+    kk = min(k, n)                      # top_k(score, k) requires k <= n
+    top_score, top_idx = jax.lax.top_k(score, kk)
     cmask = jnp.isfinite(top_score)
-    return Candidates(
-        key_hi=jnp.where(cmask, rhi[top_idx], jnp.uint32(0xFFFFFFFF)),
-        key_lo=jnp.where(cmask, rlo[top_idx], jnp.uint32(0xFFFFFFFF)),
+    out = Candidates(
+        key_hi=jnp.where(cmask, rhi[top_idx], jnp.uint32(INVALID_KEY)),
+        key_lo=jnp.where(cmask, rlo[top_idx], jnp.uint32(INVALID_KEY)),
         count=jnp.where(cmask, top_score, 0.0),
         mask=cmask)
+    if kk < k:                          # fewer items than the pool: pad
+        pad = empty(k - kk)
+        out = concat(out, pad)
+    return out
 
 
 def concat(*cands: Candidates) -> Candidates:
@@ -71,6 +101,18 @@ def concat(*cands: Candidates) -> Candidates:
         key_lo=jnp.concatenate([c.key_lo for c in cands]),
         count=jnp.concatenate([c.count for c in cands]),
         mask=jnp.concatenate([c.mask for c in cands]))
+
+
+def merge_topk(a: Candidates, b: Candidates, k: int) -> Candidates:
+    """Bounded reservoir merge: concat → dedupe (sum counts of equal keys) →
+    exact top-k.  The streaming ingest invariant: a key held by either side
+    keeps its full accumulated count, so as long as the number of distinct
+    keys ever seen stays ≤ k the reservoir equals the exact top-k of the
+    whole stream.  Reuses the sort/RLE machinery of :func:`local_topk`
+    (counts ride in as ``values``); padding entries carry count 0 and are
+    dropped by the run-sum liveness filter."""
+    c = concat(a, b)
+    return local_topk(c.key_hi, c.key_lo, k, values=c.count, mask=c.mask)
 
 
 def all_gather(cands: Candidates, axis_name) -> Candidates:

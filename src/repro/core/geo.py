@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import candidates as cand_mod
 from repro.core import heavy_hitters as hh_mod
 from repro.core import quantize, sketch as sketch_mod
+from repro.core import stream as stream_mod
 from repro.core.candidates import Candidates
 from repro.core.heavy_hitters import HeavyHitters
 from repro.core.quantize import GridSpec
@@ -53,7 +54,7 @@ def shard_map_compat(*, mesh, in_specs, out_specs):
 class GeoSketchResult(NamedTuple):
     hh: HeavyHitters            # replicated global top-K
     merged: CountSketch         # replicated merged sketch
-    local_count: jnp.ndarray    # per-shard item counts (diagnostics)
+    total_count: jnp.ndarray    # psum'd global item count (stream mass)
 
 
 def sketch_shard(sk: CountSketch, grid: GridSpec, points: jnp.ndarray,
@@ -100,21 +101,29 @@ def geo_extract(mesh: Mesh, grid: GridSpec, points: jnp.ndarray,
         return hh, merged, total
 
     hh, merged, total = spmd(sk0, points)
-    return GeoSketchResult(hh=hh, merged=merged, local_count=total)
+    return GeoSketchResult(hh=hh, merged=merged, total_count=total)
 
 
 def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
                             shard_fn, *, rows: int, log2_cols: int,
                             top_k: int, candidate_pool: int = 0,
                             data_axes: Union[str, Sequence[str]] = ("data",),
-                            seed: int = 0, num_batches: int = 1,
-                            batch_shape: Tuple[int, int] = None
+                            seed: int = 0, num_batches: int = 1
                             ) -> GeoSketchResult:
     """Streaming variant: each device *generates/loads* its own batches via
     ``shard_fn(device_linear_index, batch_index) -> (points, mask)`` traced
     inside the SPMD program (e.g. a synthetic generator or a sharded file
-    reader).  Memory stays O(batch) per device regardless of stream length —
-    the paper's 'single stream I/O' regime."""
+    reader).  ``batch_index`` arrives as a traced int32 scalar — index data
+    with ``lax.dynamic_slice``/gather or fold it into a PRNG key.
+
+    The batch loop is a ``lax.scan`` carrying ``stream.IngestState``
+    (sketch ⊕ bounded candidate reservoir ⊕ count), so per-device memory is
+    O(batch + candidate_pool + sketch) regardless of stream length, and the
+    trace is O(1) in ``num_batches`` — the paper's 'single stream I/O'
+    regime.  (The previous implementation retained every batch's keys and
+    Python-unrolled the loop, making both memory and trace O(stream);
+    tests/test_stream_ingest.py pins the fixed behaviour via the jaxpr.)
+    """
     if isinstance(data_axes, str):
         data_axes = (data_axes,)
     pool = candidate_pool or 2 * top_k
@@ -128,26 +137,17 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
         for a in data_axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
 
-        # python loop over batches (static count) — keeps candidate keys
-        sk_local = sk
-        all_keys = []
-        for b in range(num_batches):
+        def step(st, b):
             pts, mask = shard_fn(idx, b)
-            key_hi, key_lo = quantize.points_to_keys(grid, pts)
-            sk_local = sketch_mod.update_sorted(sk_local, key_hi, key_lo,
-                                                mask=mask)
-            all_keys.append((key_hi, key_lo, mask))
-        khi = jnp.concatenate([k[0] for k in all_keys])
-        klo = jnp.concatenate([k[1] for k in all_keys])
-        kmask = None if all_keys[0][2] is None else \
-            jnp.concatenate([k[2] for k in all_keys])
-        cands = cand_mod.local_topk(khi, klo, pool, mask=kmask)
+            return stream_mod.ingest_step(st, grid, pts, mask=mask), ()
+
+        st0 = stream_mod.from_sketch(sk, pool)
+        st, _ = jax.lax.scan(step, st0,
+                             jnp.arange(num_batches, dtype=jnp.int32))
         hh, merged = hh_mod.distributed_extract(
-            sk_local, cands, top_k, merge_axes=tuple(data_axes))
-        n_local = jnp.sum(jnp.ones((khi.shape[0],))) if kmask is None \
-            else jnp.sum(kmask.astype(jnp.float32))
-        total = jax.lax.psum(n_local, tuple(data_axes))
+            st.sketch, st.cands, top_k, merge_axes=tuple(data_axes))
+        total = jax.lax.psum(st.count, tuple(data_axes))
         return hh, merged, total
 
     hh, merged, total = spmd(sk0)
-    return GeoSketchResult(hh=hh, merged=merged, local_count=total)
+    return GeoSketchResult(hh=hh, merged=merged, total_count=total)

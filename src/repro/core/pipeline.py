@@ -1,17 +1,30 @@
 """Sketch-and-Scale end-to-end pipeline (paper Fig. 1).
 
-    1. set a regular grid            → core.quantize.fit_grid
-    2. count points, find heavy bins → core.sketch + core.heavy_hitters
+    1. set a regular grid            → core.quantize.fit_grid[_streaming]
+    2. count points, find heavy bins → core.sketch/stream + heavy_hitters
     3. representatives per heavy bin → core.replicas
     4. feed into tSNE / UMAP         → core.tsne / core.umap
 
 Single-host and mesh-distributed front-ends share all stages; only stage 2
 differs (local sketch vs. shard_map + psum via core.geo).
+
+Two ingest regimes for stage 1-2:
+
+* one-shot — ``run(cfg, points)`` with the full (N, D) array resident;
+* streaming — ``run_streaming(cfg, chunks)`` folds a chunk iterator
+  through ``core.stream.IngestState`` (bounded memory, two passes: chunked
+  min/max for the grid, then sketch+reservoir).  ``chunks_from_loader``
+  adapts a ``data.loader.ShardedLoader`` plan into the re-iterable chunk
+  stream this needs.
+
+The two regimes are *equivalent*: on the same data (and a candidate pool
+that covers the distinct occupied cells) they produce bit-identical heavy
+hitters — tests/test_stream_ingest.py property-tests the contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +32,7 @@ import numpy as np
 
 from repro.core import geo, heavy_hitters as hh_mod, quantize, replicas
 from repro.core import sketch as sketch_mod
+from repro.core import stream as stream_mod
 from repro.core import tsne as tsne_mod
 from repro.core import umap as umap_mod
 from repro.core.heavy_hitters import HeavyHitters
@@ -33,7 +47,8 @@ class SnsConfig:
     rows: int = 16                 # R, sketch rows
     log2_cols: int = 18            # C = 2^18 ≈ the paper's 2·10^5
     top_k: int = 20_000            # heavy hitters to extract
-    candidate_pool: int = 0        # 0 -> 2*top_k
+    candidate_pool: int = 0        # 0 -> 2*top_k (reservoir size L too)
+    ingest_chunk: int = 65_536     # streaming ingest: points per jit step
     replica_scheme: str = "count"  # "uniform" | "rank" | "count"
     max_replicas: int = 8
     jitter_frac: float = 0.25
@@ -55,11 +70,32 @@ class SnsResult:
     coverage: float                # fraction of stream mass in the HHs
 
 
-def sketch_stage(cfg: SnsConfig, points: jnp.ndarray,
+def _chunk_stream(chunks) -> Iterable:
+    """One pass over a chunk source: a callable factory or an iterable."""
+    return chunks() if callable(chunks) else iter(chunks)
+
+
+def _is_points_array(points) -> bool:
+    return isinstance(points, (jnp.ndarray, np.ndarray)) or \
+        hasattr(points, "shape")
+
+
+def sketch_stage(cfg: SnsConfig, points,
                  grid: Optional[GridSpec] = None,
                  mesh=None, data_axes=("data",)
                  ) -> Tuple[GridSpec, HeavyHitters]:
-    """Stages 1-2: grid + heavy hitters (local or mesh-distributed)."""
+    """Stages 1-2: grid + heavy hitters (local or mesh-distributed).
+
+    ``points`` may be a resident (N, D) array (one-shot path) or a chunk
+    iterator / factory (single-host streaming path; delegates to
+    :func:`sketch_stage_streaming`)."""
+    if not _is_points_array(points):
+        if mesh is not None:
+            raise ValueError(
+                "chunk-iterator input is single-host only; use "
+                "geo.geo_extract_from_shards for the mesh streaming path")
+        grid, hh, _ = sketch_stage_streaming(cfg, points, grid=grid)
+        return grid, hh
     if grid is None:
         grid = quantize.fit_grid(points, cfg.bins)
     if mesh is not None:
@@ -74,6 +110,41 @@ def sketch_stage(cfg: SnsConfig, points: jnp.ndarray,
     hh = hh_mod.extract(sk, key_hi, key_lo, k=cfg.top_k,
                         candidate_pool=cfg.candidate_pool or None)
     return grid, hh
+
+
+def sketch_stage_streaming(cfg: SnsConfig, chunks,
+                           grid: Optional[GridSpec] = None,
+                           ) -> Tuple[GridSpec, HeavyHitters, float]:
+    """Stages 1-2 over a chunk stream, bounded memory.
+
+    ``chunks``: an iterable of (n_i, D) arrays, or a zero-arg callable
+    returning one.  When ``grid`` is None two passes are made (chunked
+    min/max, then sketch), so the source must be re-iterable — pass a
+    callable or a sequence, or supply the grid up front.
+
+    Returns (grid, heavy hitters, total ingested count) — the count comes
+    from the ingest state, not from re-materializing the stream."""
+    if grid is None:
+        if not callable(chunks) and iter(chunks) is chunks:
+            raise ValueError(
+                "grid=None needs two passes over the stream, but `chunks` "
+                "is a one-shot iterator; pass a callable / sequence, or "
+                "fit the grid up front (quantize.fit_grid_streaming)")
+        grid = quantize.fit_grid_streaming(_chunk_stream(chunks), cfg.bins)
+    pool = cfg.candidate_pool or 2 * cfg.top_k
+    state = stream_mod.init(jax.random.key(cfg.seed), cfg.rows,
+                            cfg.log2_cols, pool)
+    state = stream_mod.ingest_all(state, grid, _chunk_stream(chunks),
+                                  cfg.ingest_chunk)
+    if float(state.count) == 0.0:
+        # a factory returning the SAME exhausted iterator passes the
+        # re-iterable guard above but yields nothing on the ingest pass —
+        # fail loudly instead of returning empty heavy hitters
+        raise ValueError(
+            "ingest pass saw no data; if `chunks` is a callable it must "
+            "return a FRESH iterator on every call")
+    hh = hh_mod.from_candidates(state.sketch, state.cands, cfg.top_k)
+    return grid, hh, float(state.count)
 
 
 def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
@@ -105,10 +176,20 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
     return reps, emb, w, ids
 
 
-def run(cfg: SnsConfig, points: jnp.ndarray,
-        grid: Optional[GridSpec] = None, mesh=None, data_axes=("data",),
+def run(cfg: SnsConfig, points, grid: Optional[GridSpec] = None,
+        mesh=None, data_axes=("data",),
         tsne_cfg=None, umap_cfg=None) -> SnsResult:
-    """Full SnS: points → embedding of weighted heavy-hitter representatives."""
+    """Full SnS: points → embedding of weighted heavy-hitter representatives.
+
+    A chunk iterator / factory instead of an array delegates to
+    :func:`run_streaming` (single-host only)."""
+    if not _is_points_array(points):
+        if mesh is not None:
+            raise ValueError(
+                "chunk-iterator input is single-host only; use "
+                "run_streaming(mesh=..., shard_fn=...) for the mesh path")
+        return run_streaming(cfg, points, grid=grid, tsne_cfg=tsne_cfg,
+                             umap_cfg=umap_cfg)
     grid, hh = sketch_stage(cfg, points, grid=grid, mesh=mesh,
                             data_axes=data_axes)
     reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
@@ -117,6 +198,62 @@ def run(cfg: SnsConfig, points: jnp.ndarray,
     coverage = float(jnp.sum(hh.count) / max(n_total, 1))
     return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
                      rep_weight=w, rep_hh_id=ids, coverage=coverage)
+
+
+def run_streaming(cfg: SnsConfig, chunks=None,
+                  grid: Optional[GridSpec] = None,
+                  mesh=None, data_axes=("data",),
+                  shard_fn=None, num_batches: int = 1,
+                  tsne_cfg=None, umap_cfg=None) -> SnsResult:
+    """Full SnS over a stream — no stage materializes all N points.
+
+    Single-host: ``chunks`` is an iterable of (n_i, D) arrays or a callable
+    factory (re-iterable; needed when ``grid`` is None for the min/max
+    pass).  Mesh: pass ``mesh`` + ``shard_fn(idx, batch) -> (points, mask)``
+    + ``num_batches`` (see ``geo.geo_extract_from_shards``); ``grid`` is
+    then required, since geo-distributed sites must agree on the hypercube
+    without a global data pass.
+
+    ``coverage`` is HH mass over the ingest-state's running count — the
+    stream length is never re-derived from a resident array."""
+    if mesh is not None:
+        if shard_fn is None:
+            raise ValueError("mesh streaming needs shard_fn + num_batches")
+        if grid is None:
+            raise ValueError(
+                "mesh streaming needs an agreed grid up front (the paper's "
+                "shared-hypercube contract); supply grid=")
+        res = geo.geo_extract_from_shards(
+            mesh, grid, shard_fn, rows=cfg.rows, log2_cols=cfg.log2_cols,
+            top_k=cfg.top_k, candidate_pool=cfg.candidate_pool,
+            data_axes=data_axes, seed=cfg.seed, num_batches=num_batches)
+        hh, total = res.hh, float(res.total_count)
+    else:
+        if chunks is None:
+            raise ValueError("single-host streaming needs a chunk source")
+        grid, hh, total = sketch_stage_streaming(cfg, chunks, grid=grid)
+    reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
+                                    umap_cfg=umap_cfg)
+    coverage = float(jnp.sum(hh.count)) / max(total, 1.0)
+    return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
+                     rep_weight=w, rep_hh_id=ids, coverage=coverage)
+
+
+def chunks_from_loader(plan, host: int,
+                       make_batch: Callable[[int, int], np.ndarray],
+                       batches_per_shard: int = 1) -> Callable:
+    """Adapt a ``data.loader.ShardPlan`` into the re-iterable chunk factory
+    ``run_streaming`` consumes.  Each pass builds a fresh ``ShardedLoader``
+    (its ``completed`` set is mutated by iteration, so a loader instance is
+    single-use) and yields the raw batch arrays in plan order."""
+    from repro.data.loader import ShardedLoader
+
+    def factory():
+        loader = ShardedLoader(plan, host, make_batch,
+                               batches_per_shard=batches_per_shard)
+        for _, batch in loader:
+            yield batch
+    return factory
 
 
 def assign_points_to_hh(grid: GridSpec, hh: HeavyHitters,

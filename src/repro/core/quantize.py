@@ -78,6 +78,37 @@ def fit_grid(points: jnp.ndarray, bins: int,
     return GridSpec(dims=d, bins=int(bins), lo=lo - pad * span, hi=hi + pad * span)
 
 
+def fit_grid_streaming(chunks, bins: int, pad: float = 1e-3) -> GridSpec:
+    """Fit the enclosing hypercube from a chunk stream — the first pass of
+    the two-pass streaming pipeline.  Chunked running min/max, so no stage
+    ever holds the full array; min/max are associative, which makes the
+    result bit-identical to :func:`fit_grid` on the concatenated points.
+
+    ``chunks``: an iterable of (n_i, D) arrays, or a callable returning one
+    (the re-iterable form used by ``pipeline.run_streaming``).
+    """
+    if callable(chunks):
+        chunks = chunks()
+    lo = hi = None
+    d = None
+    for c in chunks:
+        c = np.asarray(c, np.float32)
+        if c.ndim != 2:
+            c = c.reshape(-1, c.shape[-1])
+        if d is None:
+            d = c.shape[1]
+        if c.shape[0] == 0:        # empty shard batch — min has no identity
+            continue
+        clo, chi = c.min(axis=0), c.max(axis=0)
+        lo = clo if lo is None else np.minimum(lo, clo)
+        hi = chi if hi is None else np.maximum(hi, chi)
+    if lo is None:
+        raise ValueError("fit_grid_streaming: empty chunk stream")
+    span = np.maximum(hi - lo, 1e-12)
+    return GridSpec(dims=d, bins=int(bins), lo=lo - pad * span,
+                    hi=hi + pad * span)
+
+
 def quantize(grid: GridSpec, points: jnp.ndarray) -> jnp.ndarray:
     """(..., D) float points -> (..., D) uint32 bin coordinates in [0, M)."""
     lo = jnp.asarray(grid.lo_arr)

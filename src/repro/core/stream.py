@@ -1,0 +1,145 @@
+"""Streaming ingest engine: bounded-memory sketch stage over a chunked stream.
+
+The paper's headline resource claim (§II) is *logarithmic memory* and
+*single-stream I/O* on the edge nodes.  The sketch itself is trivially
+bounded — a fixed (R, C) table — but candidate tracking is not: the exact
+local top-L needs the whole key stream unless it is folded incrementally.
+This module provides that fold as a pytree + step function:
+
+    ``IngestState``  = CountSketch  ⊕  Candidates reservoir (L)  ⊕  count
+    ``ingest_step``  : state × (chunk, mask) → state          (traceable)
+    ``ingest_chunk`` : jitted, donated wrapper — per-call memory is
+                       O(chunk + L + R·C) no matter how long the stream is.
+
+The reservoir fold is ``candidates.merge_topk`` (concat → dedupe → top-L):
+a key held by the reservoir accumulates its *exact* count, so while the
+number of distinct keys seen stays ≤ L the reservoir is bit-identical to
+the one-shot exact top-L of the concatenated stream — the equivalence
+contract tested in tests/test_stream_ingest.py.  Beyond L distinct keys it
+degrades gracefully to a space-saving-style approximation whose recall on
+(ε,ℓ₂)-heavy keys is what the paper's averaging argument needs.
+
+Host-side helpers: ``rechunk`` re-packs a ragged chunk iterator into
+fixed-shape padded (points, mask) blocks so the jitted step traces once.
+
+Used by the single-host streaming pipeline (``pipeline.run_streaming``)
+and, via ``ingest_step`` inside ``lax.scan``, by the mesh streaming path
+(``geo.geo_extract_from_shards``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Iterator, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import candidates as cand_mod
+from repro.core import quantize, sketch as sketch_mod
+from repro.core.candidates import Candidates
+from repro.core.quantize import GridSpec
+from repro.core.sketch import CountSketch
+
+
+class IngestState(NamedTuple):
+    """Everything the sketch stage carries between chunks.  A pytree, so it
+    scans, donates, and psums like any other JAX state."""
+    sketch: CountSketch     # (R, C) table + hash params
+    cands: Candidates       # (L,) bounded candidate reservoir
+    count: jnp.ndarray      # () float32 — items ingested so far
+
+
+def init(key: jax.Array, rows: int, log2_cols: int, pool: int,
+         dtype=jnp.float32) -> IngestState:
+    """Fresh state: zero sketch, empty reservoir of capacity ``pool``."""
+    return IngestState(
+        sketch=sketch_mod.init(key, rows, log2_cols, dtype=dtype),
+        cands=cand_mod.empty(pool),
+        count=jnp.zeros((), jnp.float32))
+
+
+def from_sketch(sk: CountSketch, pool: int) -> IngestState:
+    """Wrap an existing (e.g. replicated-into-shard_map) sketch."""
+    return IngestState(sketch=sk, cands=cand_mod.empty(pool),
+                       count=jnp.zeros((), jnp.float32))
+
+
+def ingest_step(state: IngestState, grid: GridSpec, points: jnp.ndarray,
+                mask: Optional[jnp.ndarray] = None) -> IngestState:
+    """Traceable fold of one chunk: quantize → pack → sketch update +
+    reservoir merge.  Call inside ``lax.scan`` / ``shard_map`` / jit.
+
+    The raw chunk keys enter the reservoir merge directly as count-1
+    candidates — one sort over (pool + chunk) instead of a chunk-local
+    top-L followed by a second sort, and no per-chunk truncation (a chunk
+    with more than ``pool`` distinct keys loses nothing here; eviction
+    happens only at the reservoir boundary)."""
+    pool = state.cands.capacity
+    n = points.shape[0]
+    key_hi, key_lo = quantize.points_to_keys(grid, points)
+    sk = sketch_mod.update_sorted(state.sketch, key_hi, key_lo, mask=mask)
+    chunk_cands = Candidates(
+        key_hi=key_hi, key_lo=key_lo,
+        count=jnp.ones((n,), jnp.float32),
+        mask=jnp.ones((n,), bool) if mask is None else mask)
+    cands = state.cands.merge_topk(chunk_cands, pool)
+    if mask is None:
+        inc = jnp.full((), n, jnp.float32)
+    else:
+        inc = jnp.sum(mask.astype(jnp.float32))
+    return IngestState(sketch=sk, cands=cands, count=state.count + inc)
+
+
+@functools.partial(jax.jit, static_argnames=("grid",), donate_argnums=(0,))
+def ingest_chunk(state: IngestState, points: jnp.ndarray,
+                 mask: jnp.ndarray, *, grid: GridSpec) -> IngestState:
+    """Jitted single-trace ingest step.  ``state`` is donated: the sketch
+    table and reservoir are updated in place, so steady-state device memory
+    is one state + one chunk.  Feed fixed-shape (points, mask) blocks —
+    :func:`rechunk` produces them from any ragged iterator."""
+    return ingest_step(state, grid, points, mask=mask)
+
+
+Chunk = Union[np.ndarray, jnp.ndarray]
+
+
+def rechunk(chunks: Iterable[Chunk], size: int,
+            ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Repack a ragged stream of (n_i, D) arrays into fixed (size, D)
+    blocks + boolean masks (padding rows are zeros, mask=False).  Order
+    preserving; host-side; O(size) working memory."""
+    buf: list = []
+    have = 0
+    dims = None
+    for c in chunks:
+        c = np.asarray(c, np.float32)
+        if c.ndim != 2:
+            c = c.reshape(-1, c.shape[-1])
+        if dims is None:
+            dims = c.shape[1]
+        while c.shape[0] > 0:
+            take = min(size - have, c.shape[0])
+            buf.append(c[:take])
+            have += take
+            c = c[take:]
+            if have == size:
+                yield (np.concatenate(buf, axis=0),
+                       np.ones((size,), bool))
+                buf, have = [], 0
+    if have > 0:
+        pts = np.concatenate(buf, axis=0)
+        pad = size - have
+        pts = np.concatenate(
+            [pts, np.zeros((pad, dims), np.float32)], axis=0)
+        mask = np.arange(size) < have
+        yield pts, mask
+
+
+def ingest_all(state: IngestState, grid: GridSpec,
+               chunks: Iterable[Chunk], chunk_size: int) -> IngestState:
+    """Drive the jitted step over a whole (host-side) chunk stream."""
+    for pts, mask in rechunk(chunks, chunk_size):
+        state = ingest_chunk(state, jnp.asarray(pts), jnp.asarray(mask),
+                             grid=grid)
+    return state

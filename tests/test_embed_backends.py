@@ -110,23 +110,10 @@ def test_umap_knn_chunked_matches_dense():
 
 
 # -------------------------------------------------------- no-(N,N) regression
-def _jaxpr_avals(jaxpr):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            if hasattr(v, "aval"):
-                yield v.aval
-        for p in eqn.params.values():
-            vals = p if isinstance(p, (list, tuple)) else [p]
-            for sub in vals:
-                if hasattr(sub, "jaxpr"):
-                    yield from _jaxpr_avals(sub.jaxpr)
-                elif hasattr(sub, "eqns"):
-                    yield from _jaxpr_avals(sub)
-
-
 def _has_square_buffer(fn, n, *args):
+    from benchmarks.common import iter_jaxpr_avals
     jaxpr = jax.make_jaxpr(fn)(*args)
-    for aval in _jaxpr_avals(jaxpr.jaxpr):
+    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
         shape = getattr(aval, "shape", ())
         if len(shape) >= 2 and shape[-1] >= n and shape[-2] >= n:
             return True

@@ -40,6 +40,37 @@ def test_local_topk_fewer_distinct_than_k():
     assert float(c.count.sum()) == 256.0   # all mass accounted for
 
 
+def test_local_topk_k_exceeds_items():
+    """Regression: k > n used to crash in lax.top_k (geo.geo_extract passes
+    pool=2*top_k unguarded, so a shard smaller than the pool blew up).
+    Now the selection clamps to n and pads the output to k."""
+    hi, lo, ids = _stream(8, 4, seed=9)
+    c = candidates.local_topk(hi, lo, k=32)
+    assert c.key_hi.shape == (32,)
+    assert int(c.mask.sum()) == len(set(ids.tolist()))
+    assert float(c.count.sum()) == 8.0
+    # padding is inert: invalid key, zero count
+    pad = ~np.asarray(c.mask)
+    assert (np.asarray(c.key_hi)[pad] == 0xFFFFFFFF).all()
+    assert (np.asarray(c.count)[pad] == 0).all()
+
+
+def test_geo_extract_shard_smaller_than_pool():
+    """End-to-end regression for the same crash: a tiny stream through
+    geo.geo_extract with the default pool = 2*top_k > n."""
+    import jax
+    from repro.core import geo, quantize
+
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(0, 1, (48, 3)).astype(np.float32))
+    mesh = jax.make_mesh((1,), ("data",))
+    grid = quantize.fit_grid(pts, 4)
+    res = geo.geo_extract(mesh, grid, pts, rows=4, log2_cols=8,
+                          top_k=64)          # pool=128 > 48 items
+    assert int(res.total_count) == 48
+    assert int(np.asarray(res.hh.mask).sum()) <= 48
+
+
 def test_extract_single_shard():
     hi, lo, ids = _stream(50_000, 1_000, seed=2)
     sk = sketch.init(jax.random.key(0), rows=8, log2_cols=12)

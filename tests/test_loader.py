@@ -1,0 +1,116 @@
+"""data/loader: shard-plan determinism, no-double-processing, resume.
+
+The streaming pipeline (pipeline.run_streaming via chunks_from_loader)
+leans on three loader invariants that were previously untested:
+
+  1. the plan is a pure function of (num_shards, num_hosts, epoch) —
+     every host computes the identical assignment with no coordination;
+  2. between a host's primary pass (__iter__) and its straggler pickup
+     (steal), no shard is ever processed twice;
+  3. resuming from a recorded `completed` set replays exactly the
+     remaining shards, in plan order.
+"""
+import numpy as np
+import pytest
+
+from repro.data.loader import ShardPlan, ShardedLoader
+
+
+def _mk(shard, b):
+    return {"shard": shard, "batch": b}
+
+
+# ------------------------------------------------------------------- plan
+@pytest.mark.parametrize("num_shards,num_hosts", [(64, 4), (48, 3), (16, 16)])
+@pytest.mark.parametrize("epoch", [0, 1, 7])
+def test_plan_deterministic_partition(num_shards, num_hosts, epoch):
+    """Every host, recomputing the plan independently, sees the same
+    disjoint cover of all shards."""
+    seen = []
+    for h in range(num_hosts):
+        a = ShardPlan(num_shards, num_hosts, epoch).shards_for(h)
+        b = ShardPlan(num_shards, num_hosts, epoch).shards_for(h)
+        assert a == b                          # fresh objects, same answer
+        seen.extend(a)
+    assert sorted(seen) == list(range(num_shards))
+
+
+def test_plan_epoch_rotation_moves_shards():
+    plan0 = ShardPlan(64, 4, epoch=0)
+    plan1 = ShardPlan(64, 4, epoch=1)
+    assert plan0.shards_for(0) != plan1.shards_for(0)
+    # rotation must still partition
+    seen = sorted(s for h in range(4) for s in plan1.shards_for(h))
+    assert seen == list(range(64))
+
+
+def test_steal_order_covers_exactly_the_others():
+    plan = ShardPlan(32, 4, epoch=2)
+    for h in range(4):
+        mine = set(plan.shards_for(h))
+        stolen = plan.steal_order(h)
+        assert len(stolen) == len(set(stolen))       # no duplicates
+        assert set(stolen) == set(range(32)) - mine  # everyone else's
+
+
+# ----------------------------------------------- iterate + steal, no double
+def test_no_shard_processed_twice_between_iter_and_steal():
+    plan = ShardPlan(24, 3)
+    loader = ShardedLoader(plan, host=0, make_batch=_mk,
+                           batches_per_shard=2)
+    primary = [s for s, _ in loader]
+    # host 1 finished two shards before dying; host 2 finished none
+    done_elsewhere = plan.shards_for(1)[:2]
+    stolen = [s for s, _ in loader.steal(done_elsewhere)]
+    processed = primary + stolen
+    # each shard appears exactly batches_per_shard times, and the
+    # externally-completed shards never appear at all
+    counts = {s: processed.count(s) for s in set(processed)}
+    assert all(c == 2 for c in counts.values())
+    assert set(done_elsewhere).isdisjoint(counts)
+    assert sorted(set(processed) | set(done_elsewhere)) == list(range(24))
+
+
+def test_steal_after_full_completion_is_empty():
+    plan = ShardPlan(12, 2)
+    fast = ShardedLoader(plan, host=0, make_batch=_mk)
+    list(fast)
+    assert list(fast.steal(plan.shards_for(1))) == []
+
+
+# ------------------------------------------------------------------ resume
+def test_resume_from_completed_replays_remainder():
+    plan = ShardPlan(20, 2, epoch=3)
+    full_order = [s for s, _ in ShardedLoader(plan, 0, _mk)]
+    crashed_after = 3
+    completed = full_order[:crashed_after]
+    resumed = ShardedLoader(plan, 0, _mk, completed=completed)
+    rest = [s for s, _ in resumed]
+    assert rest == full_order[crashed_after:]    # plan order, no repeats
+    assert resumed.completed == set(full_order)
+
+
+def test_resume_yields_all_batches_of_incomplete_shards():
+    """A shard is only `completed` once ALL its batches ran — resuming an
+    incomplete shard replays it from batch 0 (batch idempotence is the
+    make_batch contract)."""
+    plan = ShardPlan(6, 1)
+    loader = ShardedLoader(plan, 0, _mk, batches_per_shard=3)
+    batches = [(s, b["batch"]) for s, b in loader]
+    assert len(batches) == 18
+    for s in plan.shards_for(0):
+        assert [b for sh, b in batches if sh == s] == [0, 1, 2]
+
+
+def test_batches_feed_streaming_pipeline_in_plan_order():
+    """chunks_from_loader: fresh loader per pass, identical order."""
+    from repro.core.pipeline import chunks_from_loader
+    plan = ShardPlan(8, 1, epoch=1)
+
+    def make(shard, b):
+        return np.full((4, 2), shard, np.float32)
+
+    factory = chunks_from_loader(plan, 0, make)
+    pass1 = [int(c[0, 0]) for c in factory()]
+    pass2 = [int(c[0, 0]) for c in factory()]
+    assert pass1 == pass2 == plan.shards_for(0)

@@ -1,0 +1,255 @@
+"""Streaming ingest engine: one-shot ↔ streaming equivalence contract.
+
+Acceptance bar for the bounded sketch stage: on the same data (with a
+candidate pool covering the distinct occupied cells) the streaming path
+produces BIT-IDENTICAL heavy hitters (keys, counts, mask) to the one-shot
+path — for the single-host pipeline and the mesh (`geo_extract_from_shards`)
+path alike, over chunk sizes that do and do not divide N.  Plus the memory
+regressions: the scanned mesh ingest allocates no buffer proportional to
+num_batches·chunk, and one jitted ingest step is O(chunk + pool + sketch).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import candidates, geo, pipeline, quantize, stream
+from repro.data.synthetic import MixtureSpec, gaussian_mixture
+
+N = 4000
+SPEC = MixtureSpec(dims=3, n_clusters=4, cluster_std=0.05,
+                   background_frac=0.0)
+# bins=4, D=3 -> at most 64 occupied cells << pool: the reservoir never
+# evicts, so streaming must be EXACTLY the one-shot sketch stage.
+CFG = pipeline.SnsConfig(bins=4, rows=8, log2_cols=10, top_k=32,
+                         candidate_pool=96, ingest_chunk=512)
+
+
+@pytest.fixture(scope="module")
+def points():
+    pts, _ = gaussian_mixture(N, SPEC, seed=1)
+    return pts
+
+
+@pytest.fixture(scope="module")
+def oneshot(points):
+    return pipeline.sketch_stage(CFG, jnp.asarray(points))
+
+
+def _chunks(points, size):
+    def factory():
+        for s in range(0, len(points), size):
+            yield points[s:s + size]
+    return factory
+
+
+def _assert_hh_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.key_hi), np.asarray(b.key_hi))
+    np.testing.assert_array_equal(np.asarray(a.key_lo), np.asarray(b.key_lo))
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+# --------------------------------------------------- single-host equivalence
+@pytest.mark.parametrize("chunk", [500, 4000, 333, 77])  # divides N & not
+def test_streaming_matches_oneshot_single_host(points, oneshot, chunk):
+    grid1, hh1 = oneshot
+    grid2, hh2, total = pipeline.sketch_stage_streaming(
+        CFG, _chunks(points, chunk))
+    assert grid1 == grid2          # chunked min/max == full-array min/max
+    assert total == float(N)
+    _assert_hh_identical(hh1, hh2)
+
+
+@given(chunk=st.integers(50, 700))
+@settings(max_examples=8, deadline=None)
+def test_streaming_matches_oneshot_property(chunk):
+    pts, _ = gaussian_mixture(N, SPEC, seed=1)
+    grid1, hh1 = pipeline.sketch_stage(CFG, jnp.asarray(pts))
+    _, hh2, _ = pipeline.sketch_stage_streaming(CFG, _chunks(pts, chunk))
+    _assert_hh_identical(hh1, hh2)
+
+
+def test_sketch_stage_accepts_chunk_iterator(points, oneshot):
+    """sketch_stage itself dispatches iterables to the streaming engine."""
+    grid1, hh1 = oneshot
+    grid2, hh2 = pipeline.sketch_stage(CFG, _chunks(points, 640))
+    assert grid1 == grid2
+    _assert_hh_identical(hh1, hh2)
+
+
+def test_streaming_needs_reiterable_without_grid(points):
+    gen = iter([points])           # one-shot iterator, no grid
+    with pytest.raises(ValueError, match="re-iterable|one-shot"):
+        pipeline.sketch_stage_streaming(CFG, gen)
+    # with the grid supplied, a one-shot iterator is fine
+    grid = quantize.fit_grid(jnp.asarray(points), CFG.bins)
+    _, hh, total = pipeline.sketch_stage_streaming(CFG, iter([points]),
+                                                   grid=grid)
+    assert total == float(N)
+
+
+# --------------------------------------------------------- mesh equivalence
+@pytest.mark.parametrize("chunk,nb", [(500, 8), (640, 7)])  # 640·7 > N: mask
+def test_streaming_matches_oneshot_mesh(points, chunk, nb):
+    pts = jnp.asarray(points)
+    mesh = jax.make_mesh((1,), ("data",))
+    grid = quantize.fit_grid(pts, CFG.bins)
+    res1 = geo.geo_extract(mesh, grid, pts, rows=CFG.rows,
+                           log2_cols=CFG.log2_cols, top_k=CFG.top_k,
+                           candidate_pool=CFG.candidate_pool, seed=CFG.seed)
+
+    def shard_fn(idx, b):
+        ids = b * chunk + jnp.arange(chunk)
+        mask = ids < N
+        return pts[jnp.minimum(ids, N - 1)], mask
+
+    res2 = geo.geo_extract_from_shards(
+        mesh, grid, shard_fn, rows=CFG.rows, log2_cols=CFG.log2_cols,
+        top_k=CFG.top_k, candidate_pool=CFG.candidate_pool, seed=CFG.seed,
+        num_batches=nb)
+    # sketch linearity: scanned chunk updates == one update of everything
+    np.testing.assert_array_equal(np.asarray(res1.merged.table),
+                                  np.asarray(res2.merged.table))
+    _assert_hh_identical(res1.hh, res2.hh)
+    assert float(res2.total_count) == float(res1.total_count) == N
+
+
+# ------------------------------------------------------- memory regressions
+def _avals(jaxpr):
+    from benchmarks.common import iter_jaxpr_avals
+    return [a for a in iter_jaxpr_avals(jaxpr) if hasattr(a, "shape")]
+
+
+def test_scanned_ingest_no_stream_buffer():
+    """The scanned mesh ingest must not allocate any buffer proportional to
+    num_batches·chunk (the old Python-unrolled loop concatenated all keys).
+    Biggest legal buffer: the sketch table R·C."""
+    chunk, nb = 256, 64
+    mesh = jax.make_mesh((1,), ("data",))
+    grid = quantize.GridSpec(dims=3, bins=4, lo=(0.0,) * 3, hi=(1.0,) * 3)
+
+    def gen_fn(idx, b):
+        k = jax.random.fold_in(jax.random.fold_in(jax.random.key(0), idx), b)
+        return jax.random.uniform(k, (chunk, 3)), None
+
+    def full():
+        return geo.geo_extract_from_shards(
+            mesh, grid, gen_fn, rows=4, log2_cols=8, top_k=8,
+            candidate_pool=16, num_batches=nb)
+
+    jaxpr = jax.make_jaxpr(full)()
+    biggest = max(int(np.prod(a.shape, dtype=np.int64))
+                  for a in _avals(jaxpr.jaxpr))
+    assert biggest < nb * chunk, \
+        f"O(stream) buffer in scanned ingest: {biggest} elems"
+    assert biggest <= 4 * 256    # nothing beyond the sketch table
+
+    # positive control: the one-shot mesh path DOES hold all N keys
+    pts = jnp.zeros((nb * chunk, 3), jnp.float32)
+
+    def oneshot():
+        return geo.geo_extract(mesh, grid, pts, rows=4, log2_cols=8,
+                               top_k=8, candidate_pool=16)
+
+    jaxpr1 = jax.make_jaxpr(oneshot)()
+    biggest1 = max(int(np.prod(a.shape, dtype=np.int64))
+                   for a in _avals(jaxpr1.jaxpr))
+    assert biggest1 >= nb * chunk
+
+
+def test_ingest_step_peak_independent_of_stream():
+    """One jitted ingest step is O(chunk + pool + R·C) — no N anywhere."""
+    grid = quantize.GridSpec(dims=3, bins=4, lo=(0.0,) * 3, hi=(1.0,) * 3)
+    state = stream.init(jax.random.key(0), 4, 8, 16)
+
+    def step(st, pts, mask):
+        return stream.ingest_step(st, grid, pts, mask=mask)
+
+    jaxpr = jax.make_jaxpr(step)(state, jnp.zeros((512, 3)),
+                                 jnp.ones((512,), bool))
+    peak = max(int(np.prod(a.shape, dtype=np.int64)) * a.dtype.itemsize
+               for a in _avals(jaxpr.jaxpr))
+    # 4 rows x 512 items of int32 hashes is the biggest legal intermediate
+    assert peak <= 4 * 512 * 4
+
+
+# ----------------------------------------------------------- reservoir unit
+def test_merge_topk_exact_when_under_capacity():
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 12, size=200).astype(np.uint32)
+    hi, lo = jnp.zeros(200, jnp.uint32), jnp.asarray(ids)
+    whole = candidates.local_topk(hi, lo, 16)
+    a = candidates.local_topk(hi[:77], lo[:77], 16)
+    b = candidates.local_topk(hi[77:], lo[77:], 16)
+    merged = a.merge_topk(b, 16)
+
+    def as_dict(c):
+        m = np.asarray(c.mask)
+        return dict(zip(np.asarray(c.key_lo)[m].tolist(),
+                        np.asarray(c.count)[m].tolist()))
+
+    assert as_dict(whole) == as_dict(merged)
+
+
+def test_merge_topk_identity():
+    c = candidates.local_topk(jnp.zeros(8, jnp.uint32),
+                              jnp.arange(8, dtype=jnp.uint32), 8)
+    merged = c.merge_topk(candidates.empty(8), 8)
+    np.testing.assert_array_equal(np.asarray(merged.count),
+                                  np.asarray(c.count))
+    assert int(merged.mask.sum()) == int(c.mask.sum())
+
+
+def test_rechunk_order_and_mask():
+    chunks = [np.full((3, 2), i, np.float32) for i in range(5)]  # 15 rows
+    out = list(stream.rechunk(chunks, 4))
+    assert len(out) == 4
+    cat = np.concatenate([p[m] for p, m in out])
+    np.testing.assert_array_equal(cat, np.concatenate(chunks))
+    assert all(p.shape == (4, 2) for p, _ in out)
+    assert int(out[-1][1].sum()) == 3          # ragged tail masked
+
+
+def test_fit_grid_streaming_matches_fit_grid(points):
+    g1 = quantize.fit_grid(jnp.asarray(points), 16)
+    g2 = quantize.fit_grid_streaming(_chunks(points, 700), 16)
+    assert g1 == g2                            # bit-identical corners
+    with pytest.raises(ValueError, match="empty"):
+        quantize.fit_grid_streaming([], 16)
+
+
+def test_ingest_count_masks_padding(points):
+    grid = quantize.fit_grid(jnp.asarray(points), CFG.bins)
+    state = stream.init(jax.random.key(0), 4, 8, 16)
+    state = stream.ingest_all(state, grid, _chunks(points, 999)(), 512)
+    assert float(state.count) == float(N)      # pad rows not counted
+
+
+# ------------------------------------------------------------- end to end
+def test_run_streaming_end_to_end(points, oneshot):
+    from repro.core.umap import UmapConfig
+    cfg = pipeline.SnsConfig(bins=4, rows=8, log2_cols=10, top_k=32,
+                             candidate_pool=96, ingest_chunk=512,
+                             max_replicas=2, embedder="umap")
+    res = pipeline.run_streaming(cfg, _chunks(points, 600),
+                                 umap_cfg=UmapConfig(n_neighbors=5,
+                                                     n_epochs=10))
+    _assert_hh_identical(oneshot[1], res.hh)
+    assert np.isfinite(np.asarray(res.embedding)).all()
+    # coverage from the ingest count, not a resident array
+    want = float(jnp.sum(res.hh.count)) / N
+    assert res.coverage == pytest.approx(want, rel=1e-6)
+
+
+def test_run_streaming_argument_validation(points):
+    with pytest.raises(ValueError, match="chunk source"):
+        pipeline.run_streaming(CFG)
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="shard_fn"):
+        pipeline.run_streaming(CFG, mesh=mesh)
+    with pytest.raises(ValueError, match="grid"):
+        pipeline.run_streaming(CFG, mesh=mesh, shard_fn=lambda i, b: None)
+    with pytest.raises(ValueError, match="single-host only"):
+        pipeline.sketch_stage(CFG, _chunks(points, 500), mesh=mesh)
