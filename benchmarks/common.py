@@ -30,6 +30,31 @@ def _sub_jaxprs(param):
             yield v
 
 
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of a primitive (e.g. "sort") in a jaxpr, recursively
+    (scan/pjit bodies are traced once, so a scanned step's primitives are
+    counted once regardless of trip count)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                n += count_primitive(sub, name)
+    return n
+
+
+def count_eqns(jaxpr) -> int:
+    """Total equation count of a jaxpr, recursively — a trace-size proxy."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                n += count_eqns(sub)
+    return n
+
+
 def peak_buffer_bytes(fn, *args) -> int:
     """Largest single intermediate of fn(*args), from the jaxpr (static)."""
     jaxpr = jax.make_jaxpr(fn)(*args)

@@ -12,6 +12,7 @@ Emits CSV blocks (name, value, paper reference) for:
   * kernel_paths         — update/estimate implementation comparison
   * embed_scaling        — tiled vs dense embedding memory/time vs N
   * ingest_scaling       — streaming vs one-shot sketch-stage memory vs N
+  * ingest_throughput    — points/sec: two-sort vs fused vs fused+superbatch
 """
 from __future__ import annotations
 
@@ -31,7 +32,7 @@ def main() -> None:
                             bench_hh_vs_sampling, bench_coverage,
                             bench_collision_model, bench_pipeline_quality,
                             bench_kernels, bench_embed_scaling,
-                            bench_ingest_scaling)
+                            bench_ingest_scaling, bench_ingest_throughput)
     n_scale = 200_000 if args.fast else 2_000_000
     n_mid = 100_000 if args.fast else 1_000_000
     n_small = 60_000 if args.fast else 300_000
@@ -53,6 +54,14 @@ def main() -> None:
             else (8192, 65536, 262144, 1048576),
             chunk=4096 if args.fast else 8192,
             oneshot_time_max=32768 if args.fast else 262144)),
+        ("ingest_throughput", lambda: bench_ingest_throughput.run(
+            sizes=(16384, 65536) if args.fast
+            else (65536, 262144, 1048576),
+            chunk=2048 if args.fast else 4096,
+            top_k=2048 if args.fast else 20480,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if args.fast
+            else bench_ingest_throughput.DEFAULT_JSON)),
     ]
     for name, fn in jobs:
         if args.only and args.only != name:

@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--shards", type=int, default=32)
     ap.add_argument("--top-k", type=int, default=512)
     ap.add_argument("--chunk", type=int, default=16_384)
+    ap.add_argument("--superbatch", type=int, default=8,
+                    help="chunks folded per dispatch (1 = per-chunk)")
     args = ap.parse_args()
 
     spec = MixtureSpec(dims=6, n_clusters=8, cluster_std=0.015,
@@ -45,9 +47,17 @@ def main():
 
     cfg = pipeline.SnsConfig(bins=16, rows=8, log2_cols=14,
                              top_k=args.top_k, candidate_pool=4 * args.top_k,
-                             ingest_chunk=args.chunk, max_replicas=4)
+                             ingest_chunk=args.chunk,
+                             ingest_superbatch=args.superbatch,
+                             max_replicas=4)
     res = pipeline.run_streaming(
         cfg, chunks, umap_cfg=UmapConfig(n_neighbors=10, n_epochs=200))
+    if res.hh_error_bound == 0.0:
+        print("[hh] reservoir never evicted — heavy hitters exact "
+              "up to the pool size")
+    else:
+        print(f"[hh] space-saving watermark {res.hh_error_bound:.0f} "
+              f"(largest count ever evicted from the reservoir)")
 
     live = int(np.asarray(res.hh.mask).sum())
     state_bytes = (cfg.rows * (1 << cfg.log2_cols) * 4          # table

@@ -1,20 +1,40 @@
-"""Exact local top-k candidate extraction over one data shard.
+"""Candidate tracking: sorted key runs, exact local top-k, reservoir merges.
 
 The Count Sketch table estimates *frequencies* but does not store key
 *identities*.  The classic stream solution keeps a heap of candidates next
 to the sketch; a heap is hostile to SPMD TPU execution, so we use the
 averaging argument instead: any globally (ε,ℓ₂)-heavy key is locally heavy
 on at least one shard.  Each shard therefore extracts its own exact top-L
-keys (sort → run-length-encode → top-k), and the global stage
-(:mod:`repro.core.heavy_hitters`) all-gathers the candidate keys and
-re-estimates them on the merged sketch.
+keys, and the global stage (:mod:`repro.core.heavy_hitters`) all-gathers
+the candidate keys and re-estimates them on the merged sketch.
+
+The throughput currency of the ingest hot path is :class:`KeyRuns` — the
+output of ONE lexsort + run-length-encode over a chunk's keys
+(:func:`sorted_runs`).  The same runs feed both sides of the streaming
+fold with no further sorting:
+
+* ``sketch.update_runs``      — the deduped scatter into the sketch table;
+* :func:`merge_runs`          — the bounded reservoir merge, a *sorted
+  merge* (binary-search ranking, no lexsort) against a reservoir kept
+  key-sorted as a carried invariant;
+* :func:`topk_from_runs`      — exact local top-k (one-shot shard path).
+
+The legacy entry points (:func:`local_topk`, :func:`merge_topk`) are thin
+compositions of the runs machinery and remain the reference semantics:
+``merge_runs`` holds exactly the same live (key → count) set, bit-identical
+counts included, as ``merge_topk`` over the raw keys — property-tested in
+tests/test_fused_ingest.py.  Only the storage ORDER differs: ``merge_topk``
+returns count-descending, ``merge_runs`` key-ascending (the invariant that
+makes the next merge sort-free).  Heavy-hitter extraction canonicalizes by
+key, so the two orders produce bit-identical heavy hitters.
 
 Everything is static-shape: L is fixed, shards with fewer than L distinct
 keys pad with an invalid key + mask.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import math
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +44,21 @@ INVALID_KEY = 0xFFFFFFFF
 
 
 class Candidates(NamedTuple):
-    """Top-L locally-frequent keys of one shard (padded, mask-carrying)."""
+    """Top-L locally-frequent keys of one shard (padded, mask-carrying).
+
+    Two storage orders occur, by provenance:
+
+    * :func:`local_topk` / :func:`topk_from_runs` / :func:`merge_topk`
+      return count-descending order (``lax.top_k`` output order);
+    * :func:`merge_runs` (and therefore the streaming reservoir) returns
+      live keys ascending with all padding at the end — the key-sorted
+      invariant the sort-free merge relies on.  :func:`empty` satisfies it
+      trivially.
+
+    Both orders carry identical (key, count, mask) *sets*; every consumer
+    (``heavy_hitters.from_candidates``, ``all_gather`` + dedupe) is
+    order-insensitive.
+    """
     key_hi: jnp.ndarray    # (L,) uint32
     key_lo: jnp.ndarray    # (L,) uint32
     count: jnp.ndarray     # (L,) float32 — exact local count
@@ -40,8 +74,28 @@ class Candidates(NamedTuple):
         return merge_topk(self, other, k=k)
 
 
+class KeyRuns(NamedTuple):
+    """Run-length-encoded sorted keys of one chunk — the single-sort
+    currency of the ingest hot path (see :func:`sorted_runs`).
+
+    ``key_hi/key_lo[j]`` for j < num_runs is the j-th distinct key in
+    ascending (hi, lo) order; ``count[j]`` its masked value sum; positions
+    j ≥ num_runs repeat the largest sorted key with count 0 (so the arrays
+    stay globally non-decreasing — required by the sort-free merge).
+    """
+    key_hi: jnp.ndarray    # (n,) uint32 — run keys, ascending, compacted
+    key_lo: jnp.ndarray    # (n,) uint32
+    count: jnp.ndarray     # (n,) summed value per run (0 past num_runs)
+    live: jnp.ndarray      # (n,) bool — position < num_runs
+
+    @property
+    def size(self) -> int:
+        return self.key_hi.shape[0]
+
+
 def empty(k: int) -> Candidates:
-    """An all-padding candidate reservoir of capacity k (merge identity)."""
+    """An all-padding candidate reservoir of capacity k (merge identity;
+    key-sorted trivially)."""
     return Candidates(
         key_hi=jnp.full((k,), INVALID_KEY, jnp.uint32),
         key_lo=jnp.full((k,), INVALID_KEY, jnp.uint32),
@@ -49,49 +103,93 @@ def empty(k: int) -> Candidates:
         mask=jnp.zeros((k,), bool))
 
 
-def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
-               values: Optional[jnp.ndarray] = None,
-               mask: Optional[jnp.ndarray] = None) -> Candidates:
-    """Exact top-k distinct keys of this shard by total count/value.
+def sorted_runs(key_hi: jnp.ndarray, key_lo: jnp.ndarray,
+                values: Optional[jnp.ndarray] = None,
+                mask: Optional[jnp.ndarray] = None,
+                dtype=jnp.float32, assume_hi_zero: bool = False) -> KeyRuns:
+    """THE sort of the ingest hot path: lexsort (hi, lo) → run-length
+    segments → per-run value sum.  One TPU-native bitonic sort per chunk;
+    everything downstream (sketch scatter, reservoir merge, local top-k)
+    consumes the runs without re-sorting.
 
-    sort (TPU-native bitonic) → run-length segments → segment_sum →
-    top_k.  O(n log n) work, fully vectorized, static shapes.
+    ``values`` defaults to 1 (counting); ``mask`` zeroes padding rows —
+    masked rows still occupy sort slots, so a run whose occurrences are all
+    masked survives with count 0 (dropped later by liveness filters).
 
-    ``k`` may exceed the number of items n (e.g. a small chunk against a
-    large candidate pool): the selection is clamped to n and the output is
-    padded to k with invalid keys + mask=False.
+    ``assume_hi_zero`` is a STATIC fast path for keys known to fit the low
+    limb (grids packing ≤ 32 bits, i.e. ``dims·bits_per_dim ≤ 32`` — the
+    caller's contract): the sort compares one u32 key instead of two,
+    which is the dominant cost of the whole fold.  With ``key_hi ≡ 0``
+    both paths are the identical stable permutation, so results are
+    bit-identical.
     """
     n = key_hi.shape[0]
-    v = jnp.ones((n,), jnp.float32) if values is None \
-        else values.astype(jnp.float32)
+    v = jnp.ones((n,), dtype) if values is None else values.astype(dtype)
     if mask is not None:
-        v = v * mask.astype(jnp.float32)
-    order = jnp.lexsort((key_lo, key_hi))
+        v = v * mask.astype(dtype)
+    order = jnp.lexsort((key_lo,) if assume_hi_zero else (key_lo, key_hi))
     shi, slo, sv = key_hi[order], key_lo[order], v[order]
-    new_run = jnp.concatenate([
-        jnp.ones((1,), bool),
-        (shi[1:] != shi[:-1]) | (slo[1:] != slo[:-1])])
+    if assume_hi_zero:
+        new_run = jnp.concatenate([
+            jnp.ones((1,), bool), slo[1:] != slo[:-1]])
+    else:
+        new_run = jnp.concatenate([
+            jnp.ones((1,), bool),
+            (shi[1:] != shi[:-1]) | (slo[1:] != slo[:-1])])
     run_id = jnp.cumsum(new_run) - 1
-    run_sum = jax.ops.segment_sum(sv, run_id, num_segments=n)   # (n,) padded
-    first_idx = jnp.where(new_run, size=n, fill_value=n - 1)[0]
-    rhi, rlo = shi[first_idx], slo[first_idx]
-    num_runs = run_id[-1] + 1
-    live = jnp.arange(n) < num_runs
-    # masked-out inputs can form runs with sum 0 — drop them too
-    live &= run_sum > 0
-    score = jnp.where(live, run_sum, -jnp.inf)
+    run_sum = jax.ops.segment_sum(sv, run_id, num_segments=n)
+    # representative key of each run = first occurrence (run_id is sorted,
+    # so a searchsorted replaces the costlier nonzero-with-size); dead
+    # slots clip to n-1, repeating the largest sorted key so the arrays
+    # stay globally non-decreasing
+    first_idx = jnp.clip(
+        jnp.searchsorted(run_id, jnp.arange(n), side="left"), 0, n - 1)
+    return KeyRuns(key_hi=shi[first_idx], key_lo=slo[first_idx],
+                   count=run_sum,
+                   live=jnp.arange(n) < (run_id[-1] + 1))
+
+
+def topk_from_runs(runs: KeyRuns, k: int, return_dropped: bool = False):
+    """Exact top-k runs by count (count-descending order, like
+    :func:`local_topk`).  ``k`` may exceed the number of slots: output is
+    padded to k with invalid keys + mask=False.
+
+    ``return_dropped=True`` additionally returns the largest live count
+    NOT selected (the (k+1)-th largest; 0.0 when nothing is truncated) —
+    the one-shot analog of the reservoir eviction watermark: any key with
+    a larger local count is guaranteed to be among the candidates."""
+    n = runs.size
+    live = runs.live & (runs.count > 0)
+    score = jnp.where(live, runs.count.astype(jnp.float32), -jnp.inf)
     kk = min(k, n)                      # top_k(score, k) requires k <= n
-    top_score, top_idx = jax.lax.top_k(score, kk)
+    kk2 = min(k + 1, n)                 # one extra for the drop watermark
+    top_score, top_idx = jax.lax.top_k(score, kk2)
+    dropped = jnp.maximum(top_score[kk2 - 1], 0.0) if kk2 > kk \
+        else jnp.zeros(())              # kk == n: nothing can be dropped
+    top_score, top_idx = top_score[:kk], top_idx[:kk]
     cmask = jnp.isfinite(top_score)
     out = Candidates(
-        key_hi=jnp.where(cmask, rhi[top_idx], jnp.uint32(INVALID_KEY)),
-        key_lo=jnp.where(cmask, rlo[top_idx], jnp.uint32(INVALID_KEY)),
+        key_hi=jnp.where(cmask, runs.key_hi[top_idx],
+                         jnp.uint32(INVALID_KEY)),
+        key_lo=jnp.where(cmask, runs.key_lo[top_idx],
+                         jnp.uint32(INVALID_KEY)),
         count=jnp.where(cmask, top_score, 0.0),
         mask=cmask)
     if kk < k:                          # fewer items than the pool: pad
-        pad = empty(k - kk)
-        out = concat(out, pad)
+        out = concat(out, empty(k - kk))
+    if return_dropped:
+        return out, dropped
     return out
+
+
+def local_topk(key_hi: jnp.ndarray, key_lo: jnp.ndarray, k: int,
+               values: Optional[jnp.ndarray] = None,
+               mask: Optional[jnp.ndarray] = None) -> Candidates:
+    """Exact top-k distinct keys of this shard by total count/value:
+    :func:`sorted_runs` + :func:`topk_from_runs`.  O(n log n) work, fully
+    vectorized, static shapes."""
+    return topk_from_runs(
+        sorted_runs(key_hi, key_lo, values=values, mask=mask), k)
 
 
 def concat(*cands: Candidates) -> Candidates:
@@ -104,15 +202,146 @@ def concat(*cands: Candidates) -> Candidates:
 
 
 def merge_topk(a: Candidates, b: Candidates, k: int) -> Candidates:
-    """Bounded reservoir merge: concat → dedupe (sum counts of equal keys) →
-    exact top-k.  The streaming ingest invariant: a key held by either side
+    """Unordered reservoir merge: concat → lexsort → dedupe (sum counts of
+    equal keys) → exact top-k.  Works for ANY input order (the all-gather
+    merge path); the streaming fold uses the sort-free :func:`merge_runs`
+    instead, which holds the identical live set.  A key held by either side
     keeps its full accumulated count, so as long as the number of distinct
     keys ever seen stays ≤ k the reservoir equals the exact top-k of the
-    whole stream.  Reuses the sort/RLE machinery of :func:`local_topk`
-    (counts ride in as ``values``); padding entries carry count 0 and are
-    dropped by the run-sum liveness filter."""
+    whole stream."""
     c = concat(a, b)
     return local_topk(c.key_hi, c.key_lo, k, values=c.count, mask=c.mask)
+
+
+def _searchsorted_pair(b_hi: jnp.ndarray, b_lo: jnp.ndarray,
+                       q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+                       side: str) -> jnp.ndarray:
+    """searchsorted over lexicographically sorted (hi, lo) uint32 pairs.
+
+    64-bit keys live as uint32 limb pairs (TPUs lack 64-bit ints), so
+    ``jnp.searchsorted`` cannot see them as one value; this is the standard
+    vectorized binary search with a two-limb comparator — ⌈log₂(n+1)⌉
+    statically-unrolled gather rounds, no sort anywhere.
+    """
+    n = b_hi.shape[0]
+    lo = jnp.zeros(q_hi.shape, jnp.int32)
+    hi = jnp.full(q_hi.shape, n, jnp.int32)
+    for _ in range(max(1, math.ceil(math.log2(n + 1)))):
+        done = lo >= hi
+        mid = (lo + hi) >> 1
+        mhi, mlo = b_hi[mid], b_lo[mid]
+        if side == "left":              # count of b strictly < q
+            go_right = (mhi < q_hi) | ((mhi == q_hi) & (mlo < q_lo))
+        else:                           # count of b <= q
+            go_right = (mhi < q_hi) | ((mhi == q_hi) & (mlo <= q_lo))
+        lo = jnp.where(done, lo, jnp.where(go_right, mid + 1, lo))
+        hi = jnp.where(done, hi, jnp.where(go_right, hi, mid))
+    return lo
+
+
+def merge_runs(pool: Candidates, runs: KeyRuns, k: int
+               ) -> Tuple[Candidates, jnp.ndarray]:
+    """Sort-free bounded reservoir merge: the streaming-fold hot path.
+
+    ``pool`` MUST be key-sorted (live keys ascending, padding at the end —
+    the invariant :func:`empty` starts and this function maintains); the
+    chunk side arrives pre-deduped and sorted as :class:`KeyRuns`.  The
+    merge is then a *sorted merge*, built entirely from gathers, cumsums
+    and reductions — XLA-CPU/TPU-hostile primitives (sort, scatter,
+    nonzero, top_k) are deliberately absent from the whole function:
+
+    1. cross binary search ranks each side's slot in the combined order
+       (pool wins ties) — no sort;
+    2. the merged sorted view is materialized by GATHER from the monotone
+       rank arrays (``searchsorted`` of the positions) — no scatter;
+    3. duplicate keys sum by a shifted pair-add: the pool holds distinct
+       keys and the runs are deduped, so every merged key has ≤ 2 nonzero
+       occurrences, adjacent, pool first — no segment_sum;
+    4. the k-th largest count comes from a bitwise bisection on the
+       (monotone for finite non-negatives) float32 bit pattern, counting
+       survivors per trial bit — no top_k;
+    5. selected entries compact to the front via ``searchsorted`` over the
+       selection cumsum — order, and therefore the key-sorted invariant,
+       is preserved.
+
+    Bit-identity with :func:`merge_topk`: identical live keys and exactly
+    equal counts (all adds are exact small integers in f32; the selection
+    reproduces ``lax.top_k``'s break-ties-by-lower-index rule, which in
+    both paths means ascending key order).
+
+    Returns ``(merged, evicted_max)`` where ``evicted_max`` is the largest
+    count evicted in THIS merge (0.0 if nothing was evicted) — the
+    space-saving diagnostic accumulated by ``stream.IngestState``.
+    """
+    pool_n, n = pool.capacity, runs.size
+    tot = pool_n + n
+    p_cnt = pool.count * pool.mask.astype(pool.count.dtype)
+    r_cnt = runs.count.astype(jnp.float32)
+
+    # 1. combined sorted order via cross binary search (stable, pool first)
+    pos_p = jnp.arange(pool_n, dtype=jnp.int32) + _searchsorted_pair(
+        runs.key_hi, runs.key_lo, pool.key_hi, pool.key_lo, "left")
+    pos_r = jnp.arange(n, dtype=jnp.int32) + _searchsorted_pair(
+        pool.key_hi, pool.key_lo, runs.key_hi, runs.key_lo, "right")
+
+    # 2. merged view by gather: every slot is pool's or runs'; counting
+    # run slots ≤ p in the SMALL (n-entry, cache-resident) rank array
+    # gives both the discriminator and both gather indices — pidx =
+    # p - (#run slots ≤ p), so no search over the pool_n-entry side
+    p_all = jnp.arange(tot, dtype=jnp.int32)
+    r_le = jnp.searchsorted(pos_r, p_all, side="left").astype(jnp.int32)
+    is_run = (r_le < n) & (pos_r[jnp.clip(r_le, 0, n - 1)] == p_all)
+    from_pool = ~is_run
+    pidx = p_all - r_le - is_run.astype(jnp.int32)
+    pidx_c = jnp.clip(pidx, 0, pool_n - 1)
+    ridx = jnp.clip(p_all - pidx - 1, 0, n - 1)
+    m_hi = jnp.where(from_pool, pool.key_hi[pidx_c], runs.key_hi[ridx])
+    m_lo = jnp.where(from_pool, pool.key_lo[pidx_c], runs.key_lo[ridx])
+    m_cnt = jnp.where(from_pool, p_cnt[pidx_c], r_cnt[ridx])
+
+    # 3. pair-add dedupe: each key occurs ≤ 2× with nonzero count (pool
+    # distinct ∧ runs deduped), adjacent, pool first — the sum of a run
+    # is its head count plus its immediate same-key successor's
+    new_run = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (m_hi[1:] != m_hi[:-1]) | (m_lo[1:] != m_lo[:-1])])
+    nxt_cnt = jnp.concatenate([m_cnt[1:], jnp.zeros((1,), jnp.float32)])
+    csum = m_cnt + jnp.where(jnp.concatenate([~new_run[1:],
+                                              jnp.zeros((1,), bool)]),
+                             nxt_cnt, 0.0)
+    live = new_run & (csum > 0)       # value valid at run heads only
+
+    # 4. k-th largest live count: bitwise-greedy max threshold t with
+    # |{live : count ≥ t}| ≥ k, on the f32 bit pattern (monotone for
+    # finite non-negative floats); t = 0 when fewer than k live
+    cbits = jax.lax.bitcast_convert_type(csum, jnp.uint32)
+    thresh = jnp.zeros((), jnp.uint32)
+    for b in range(30, -1, -1):       # counts are finite positives: ≤ 2³¹
+        cand = thresh | jnp.uint32(1 << b)
+        cnt = jnp.sum(live & (cbits >= cand))
+        thresh = jnp.where(cnt >= k, cand, thresh)
+    gt = live & (cbits > thresh)
+    n_gt = jnp.sum(gt.astype(jnp.int32))
+    eq = live & (cbits == thresh) & (csum > 0)
+    eq_rank = jnp.cumsum(eq) - 1
+    sel = gt | (eq & (eq_rank < (k - n_gt)))
+
+    evicted = jnp.where(live & ~sel, csum, 0.0)
+    evicted_max = jnp.max(evicted, initial=0.0)
+
+    # 5. gather-compact the selected run heads to the front: the q-th
+    # output is the merged position where the selection cumsum first
+    # reaches q+1 (ascending → key-sorted invariant preserved)
+    csel = jnp.cumsum(sel)
+    src = jnp.clip(jnp.searchsorted(csel, jnp.arange(1, k + 1),
+                                    side="left"), 0, tot - 1)
+    valid = jnp.arange(k) < csel[-1]
+    out = Candidates(
+        key_hi=jnp.where(valid, m_hi[src], jnp.uint32(INVALID_KEY)),
+        key_lo=jnp.where(valid, m_lo[src], jnp.uint32(INVALID_KEY)),
+        count=jnp.where(valid, csum[src], 0.0),
+        mask=valid)
+    return out, evicted_max
 
 
 def all_gather(cands: Candidates, axis_name) -> Candidates:

@@ -55,17 +55,29 @@ class GeoSketchResult(NamedTuple):
     hh: HeavyHitters            # replicated global top-K
     merged: CountSketch         # replicated merged sketch
     total_count: jnp.ndarray    # psum'd global item count (stream mass)
+    # pmax'd candidate-stage watermark: the largest count any shard ever
+    # withheld from the candidate set (local top-L truncation in the
+    # one-shot path, reservoir eviction in the streaming path); 0 ⇒ every
+    # occupied cell was proposed — the HH candidate set is complete
+    evict_max: jnp.ndarray
 
 
 def sketch_shard(sk: CountSketch, grid: GridSpec, points: jnp.ndarray,
                  candidate_pool: int,
                  mask: Optional[jnp.ndarray] = None,
-                 ) -> Tuple[CountSketch, Candidates]:
-    """One edge node's work: quantize → pack → sketch update + local top-L."""
+                 ) -> Tuple[CountSketch, Candidates, jnp.ndarray]:
+    """One edge node's work: quantize → pack → ONE sort+RLE feeding both
+    the sketch scatter and the local top-L (the fused single-sort layout;
+    the pre-fusion path sorted the same keys twice).  Also returns the
+    local truncation watermark (largest count NOT proposed; 0 = none)."""
     key_hi, key_lo = quantize.points_to_keys(grid, points)
-    sk = sketch_mod.update_sorted(sk, key_hi, key_lo, mask=mask)
-    cands = cand_mod.local_topk(key_hi, key_lo, candidate_pool, mask=mask)
-    return sk, cands
+    runs = cand_mod.sorted_runs(
+        key_hi, key_lo, mask=mask,
+        assume_hi_zero=grid.dims * grid.bits_per_dim <= 32)
+    sk = sketch_mod.update_runs(sk, runs)
+    cands, dropped = cand_mod.topk_from_runs(runs, candidate_pool,
+                                             return_dropped=True)
+    return sk, cands, dropped
 
 
 def geo_extract(mesh: Mesh, grid: GridSpec, points: jnp.ndarray,
@@ -89,19 +101,21 @@ def geo_extract(mesh: Mesh, grid: GridSpec, points: jnp.ndarray,
 
     pspec = P(tuple(data_axes))
     in_specs = (P(), pspec)           # sketch replicated, points sharded
-    out_specs = (P(), P(), P())       # everything replicated afterwards
+    out_specs = (P(), P(), P(), P())  # everything replicated afterwards
 
     @shard_map_compat(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     def spmd(sk, pts):
-        sk_local, cands = sketch_shard(sk, grid, pts, pool)
+        sk_local, cands, dropped = sketch_shard(sk, grid, pts, pool)
         hh, merged = hh_mod.distributed_extract(
             sk_local, cands, top_k, merge_axes=tuple(data_axes))
         n_local = jnp.full((), pts.shape[0], jnp.float32)
         total = jax.lax.psum(n_local, tuple(data_axes))
-        return hh, merged, total
+        evict = jax.lax.pmax(dropped, tuple(data_axes))
+        return hh, merged, total, evict
 
-    hh, merged, total = spmd(sk0, points)
-    return GeoSketchResult(hh=hh, merged=merged, total_count=total)
+    hh, merged, total, evict = spmd(sk0, points)
+    return GeoSketchResult(hh=hh, merged=merged, total_count=total,
+                           evict_max=evict)
 
 
 def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
@@ -117,12 +131,16 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
     with ``lax.dynamic_slice``/gather or fold it into a PRNG key.
 
     The batch loop is a ``lax.scan`` carrying ``stream.IngestState``
-    (sketch ⊕ bounded candidate reservoir ⊕ count), so per-device memory is
-    O(batch + candidate_pool + sketch) regardless of stream length, and the
-    trace is O(1) in ``num_batches`` — the paper's 'single stream I/O'
-    regime.  (The previous implementation retained every batch's keys and
-    Python-unrolled the loop, making both memory and trace O(stream);
-    tests/test_stream_ingest.py pins the fixed behaviour via the jaxpr.)
+    (sketch ⊕ bounded candidate reservoir ⊕ count ⊕ eviction watermark),
+    so per-device memory is O(batch + candidate_pool + sketch) regardless
+    of stream length, and the trace is O(1) in ``num_batches`` — the
+    paper's 'single stream I/O' regime.  (The previous implementation
+    retained every batch's keys and Python-unrolled the loop, making both
+    memory and trace O(stream); tests/test_stream_ingest.py pins the fixed
+    behaviour via the jaxpr.)  The step is the fused single-sort fold
+    (``stream.ingest_step``): one sort per batch feeds both the sketch
+    scatter and the sorted-merge reservoir update —
+    tests/test_fused_ingest.py pins the one-sort-per-step jaxpr.
     """
     if isinstance(data_axes, str):
         data_axes = (data_axes,)
@@ -130,7 +148,7 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
     sk0 = sketch_mod.init(jax.random.key(seed), rows, log2_cols)
 
     @shard_map_compat(mesh=mesh, in_specs=(P(),),
-                      out_specs=(P(), P(), P()))
+                      out_specs=(P(), P(), P(), P()))
     def spmd(sk):
         # linear shard index from the mesh axes
         idx = jnp.zeros((), jnp.int32)
@@ -147,7 +165,9 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
         hh, merged = hh_mod.distributed_extract(
             st.sketch, st.cands, top_k, merge_axes=tuple(data_axes))
         total = jax.lax.psum(st.count, tuple(data_axes))
-        return hh, merged, total
+        evict = jax.lax.pmax(st.evict_max, tuple(data_axes))
+        return hh, merged, total, evict
 
-    hh, merged, total = spmd(sk0)
-    return GeoSketchResult(hh=hh, merged=merged, total_count=total)
+    hh, merged, total, evict = spmd(sk0)
+    return GeoSketchResult(hh=hh, merged=merged, total_count=total,
+                           evict_max=evict)

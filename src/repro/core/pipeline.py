@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import candidates as cand_mod
 from repro.core import geo, heavy_hitters as hh_mod, quantize, replicas
 from repro.core import sketch as sketch_mod
 from repro.core import stream as stream_mod
@@ -48,7 +49,8 @@ class SnsConfig:
     log2_cols: int = 18            # C = 2^18 ≈ the paper's 2·10^5
     top_k: int = 20_000            # heavy hitters to extract
     candidate_pool: int = 0        # 0 -> 2*top_k (reservoir size L too)
-    ingest_chunk: int = 65_536     # streaming ingest: points per jit step
+    ingest_chunk: int = 65_536     # streaming ingest: points per chunk step
+    ingest_superbatch: int = 8     # chunks folded per dispatch (1 = off)
     replica_scheme: str = "count"  # "uniform" | "rank" | "count"
     max_replicas: int = 8
     jitter_frac: float = 0.25
@@ -68,6 +70,12 @@ class SnsResult:
     rep_weight: np.ndarray         # weights of live reps
     rep_hh_id: np.ndarray          # HH index of each live rep
     coverage: float                # fraction of stream mass in the HHs
+    # candidate-stage recall diagnostic, measured on every path: the
+    # largest exact count ever withheld from the candidate set (reservoir
+    # eviction when streaming; local top-L truncation one-shot; pmax over
+    # shards on a mesh).  0.0 = the candidate set provably contains every
+    # occupied cell, so the heavy hitters are exact up to the pool size
+    hh_error_bound: float = 0.0
 
 
 def _chunk_stream(chunks) -> Iterable:
@@ -89,13 +97,23 @@ def sketch_stage(cfg: SnsConfig, points,
     ``points`` may be a resident (N, D) array (one-shot path) or a chunk
     iterator / factory (single-host streaming path; delegates to
     :func:`sketch_stage_streaming`)."""
+    grid, hh, _ = _sketch_stage_impl(cfg, points, grid=grid, mesh=mesh,
+                                     data_axes=data_axes)
+    return grid, hh
+
+
+def _sketch_stage_impl(cfg: SnsConfig, points, grid, mesh, data_axes
+                       ) -> Tuple[GridSpec, HeavyHitters, float]:
+    """Stages 1-2 plus the candidate-stage recall watermark (the third
+    return: largest count withheld from the candidate set; 0 = complete)."""
     if not _is_points_array(points):
         if mesh is not None:
             raise ValueError(
                 "chunk-iterator input is single-host only; use "
                 "geo.geo_extract_from_shards for the mesh streaming path")
-        grid, hh, _ = sketch_stage_streaming(cfg, points, grid=grid)
-        return grid, hh
+        grid, state = _ingest_stream(cfg, points, grid)
+        hh = hh_mod.from_candidates(state.sketch, state.cands, cfg.top_k)
+        return grid, hh, float(stream_mod.space_saving_bound(state))
     if grid is None:
         grid = quantize.fit_grid(points, cfg.bins)
     if mesh is not None:
@@ -103,13 +121,20 @@ def sketch_stage(cfg: SnsConfig, points,
             mesh, grid, points, rows=cfg.rows, log2_cols=cfg.log2_cols,
             top_k=cfg.top_k, candidate_pool=cfg.candidate_pool,
             data_axes=data_axes, seed=cfg.seed)
-        return grid, res.hh
+        return grid, res.hh, float(res.evict_max)
+    # fused single-sort path: one sort+RLE feeds the sketch scatter and
+    # the candidate top-k alike (same math as update_sorted + extract)
     key_hi, key_lo = quantize.points_to_keys(grid, points)
     sk = sketch_mod.init(jax.random.key(cfg.seed), cfg.rows, cfg.log2_cols)
-    sk = sketch_mod.update_sorted(sk, key_hi, key_lo)
-    hh = hh_mod.extract(sk, key_hi, key_lo, k=cfg.top_k,
-                        candidate_pool=cfg.candidate_pool or None)
-    return grid, hh
+    runs = cand_mod.sorted_runs(
+        key_hi, key_lo,
+        assume_hi_zero=grid.dims * grid.bits_per_dim <= 32)
+    sk = sketch_mod.update_runs(sk, runs)
+    pool = cfg.candidate_pool or min(2 * cfg.top_k, key_hi.shape[0])
+    cands, dropped = cand_mod.topk_from_runs(runs, pool,
+                                             return_dropped=True)
+    hh = hh_mod.from_candidates(sk, cands, cfg.top_k)
+    return grid, hh, float(dropped)
 
 
 def sketch_stage_streaming(cfg: SnsConfig, chunks,
@@ -124,6 +149,16 @@ def sketch_stage_streaming(cfg: SnsConfig, chunks,
 
     Returns (grid, heavy hitters, total ingested count) — the count comes
     from the ingest state, not from re-materializing the stream."""
+    grid, state = _ingest_stream(cfg, chunks, grid)
+    hh = hh_mod.from_candidates(state.sketch, state.cands, cfg.top_k)
+    return grid, hh, float(state.count)
+
+
+def _ingest_stream(cfg: SnsConfig, chunks, grid: Optional[GridSpec]
+                   ) -> Tuple[GridSpec, stream_mod.IngestState]:
+    """Shared ingest fold: grid fit (pass 1 if needed) + fused superbatched
+    ingest (pass 2).  Returns the final :class:`stream.IngestState` so
+    callers can surface its diagnostics (count, eviction watermark)."""
     if grid is None:
         if not callable(chunks) and iter(chunks) is chunks:
             raise ValueError(
@@ -135,7 +170,8 @@ def sketch_stage_streaming(cfg: SnsConfig, chunks,
     state = stream_mod.init(jax.random.key(cfg.seed), cfg.rows,
                             cfg.log2_cols, pool)
     state = stream_mod.ingest_all(state, grid, _chunk_stream(chunks),
-                                  cfg.ingest_chunk)
+                                  cfg.ingest_chunk,
+                                  superbatch=cfg.ingest_superbatch)
     if float(state.count) == 0.0:
         # a factory returning the SAME exhausted iterator passes the
         # re-iterable guard above but yields nothing on the ingest pass —
@@ -143,8 +179,7 @@ def sketch_stage_streaming(cfg: SnsConfig, chunks,
         raise ValueError(
             "ingest pass saw no data; if `chunks` is a callable it must "
             "return a FRESH iterator on every call")
-    hh = hh_mod.from_candidates(state.sketch, state.cands, cfg.top_k)
-    return grid, hh, float(state.count)
+    return grid, state
 
 
 def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
@@ -190,14 +225,15 @@ def run(cfg: SnsConfig, points, grid: Optional[GridSpec] = None,
                 "run_streaming(mesh=..., shard_fn=...) for the mesh path")
         return run_streaming(cfg, points, grid=grid, tsne_cfg=tsne_cfg,
                              umap_cfg=umap_cfg)
-    grid, hh = sketch_stage(cfg, points, grid=grid, mesh=mesh,
-                            data_axes=data_axes)
+    grid, hh, bound = _sketch_stage_impl(cfg, points, grid=grid, mesh=mesh,
+                                         data_axes=data_axes)
     reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
                                     umap_cfg=umap_cfg)
     n_total = int(np.prod(points.shape[:-1]))  # all leading dims are batch
     coverage = float(jnp.sum(hh.count) / max(n_total, 1))
     return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
-                     rep_weight=w, rep_hh_id=ids, coverage=coverage)
+                     rep_weight=w, rep_hh_id=ids, coverage=coverage,
+                     hh_error_bound=bound)
 
 
 def run_streaming(cfg: SnsConfig, chunks=None,
@@ -228,15 +264,20 @@ def run_streaming(cfg: SnsConfig, chunks=None,
             top_k=cfg.top_k, candidate_pool=cfg.candidate_pool,
             data_axes=data_axes, seed=cfg.seed, num_batches=num_batches)
         hh, total = res.hh, float(res.total_count)
+        bound = float(res.evict_max)   # pmax'd per-shard watermark
     else:
         if chunks is None:
             raise ValueError("single-host streaming needs a chunk source")
-        grid, hh, total = sketch_stage_streaming(cfg, chunks, grid=grid)
+        grid, state = _ingest_stream(cfg, chunks, grid)
+        hh = hh_mod.from_candidates(state.sketch, state.cands, cfg.top_k)
+        total = float(state.count)
+        bound = float(stream_mod.space_saving_bound(state))
     reps, emb, w, ids = embed_stage(cfg, grid, hh, tsne_cfg=tsne_cfg,
                                     umap_cfg=umap_cfg)
     coverage = float(jnp.sum(hh.count)) / max(total, 1.0)
     return SnsResult(grid=grid, hh=hh, reps=reps, embedding=emb,
-                     rep_weight=w, rep_hh_id=ids, coverage=coverage)
+                     rep_weight=w, rep_hh_id=ids, coverage=coverage,
+                     hh_error_bound=bound)
 
 
 def chunks_from_loader(plan, host: int,

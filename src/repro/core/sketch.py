@@ -6,18 +6,25 @@ sketches built with the same hashes is element-wise addition of the tables.
 That linearity is the entire geo-distributed story of the paper, and here
 it is also what makes the TPU story work: ``merge == jax.lax.psum``.
 
-Two update paths are provided:
+Three update paths are provided:
 
 * :func:`update` — XLA ``scatter-add`` per row (flattened to one scatter).
   Simple, always correct, and the gradient-compression path.
-* :func:`update_sorted` — sort keys → run-length-encode → one *deduped*
-  scatter.  On TPU, ``sort`` is a native bitonic network and turns the
-  random-access scatter into sequential memory traffic; preferred when the
-  number of items per call is ≫ the number of distinct cells (the paper's
-  regime: 10⁸ points → 10⁵ cells).
+* :func:`update_runs` — THE bulk/streaming path: scatter of pre-deduped
+  sorted key runs (``candidates.KeyRuns``).  The streaming ingest engine
+  (``core.stream.ingest_step``) sorts + run-length-encodes each chunk
+  exactly once via ``candidates.sorted_runs`` and feeds the same runs to
+  this scatter AND to the reservoir merge — one sort per chunk total.
+* :func:`update_sorted` — convenience wrapper: ``sorted_runs`` +
+  ``update_runs`` for callers holding raw keys.  On TPU, ``sort`` is a
+  native bitonic network and turns the random-access scatter into
+  sequential memory traffic; preferred over :func:`update` when the number
+  of items per call is ≫ the number of distinct cells (the paper's
+  regime: 10⁸ points → 10⁵ cells) — but if a top-k/reservoir stage also
+  needs the keys, build the runs once and use :func:`update_runs`.
 
-Both are exactly equivalent (tested).  The Pallas kernel in
-``repro.kernels.sketch_update`` is a third, fused low-latency path.
+All are exactly equivalent (tested).  The Pallas kernel in
+``repro.kernels.sketch_update`` is a fused low-latency small-batch path.
 
 Table dtype: float32 by default (exact integer counting up to 2²⁴ per
 bucket per shard; shards hold ≪ 2²⁴ items per bucket in practice, and the
@@ -34,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, u64
+from repro.core.candidates import KeyRuns, sorted_runs
 
 
 class CountSketch(NamedTuple):
@@ -100,32 +108,28 @@ def update(sk: CountSketch, key_hi: jnp.ndarray, key_lo: jnp.ndarray,
     return sk._replace(table=flat.reshape(sk.table.shape))
 
 
+def update_runs(sk: CountSketch, runs: KeyRuns) -> CountSketch:
+    """Scatter pre-deduped sorted key runs into the table — the bulk path.
+
+    ``runs`` comes from ``candidates.sorted_runs``; the caller pays that one
+    sort and reuses the runs for the reservoir merge too (the fused ingest
+    step).  Dead slots carry count 0, so they scatter nothing."""
+    return update(sk, runs.key_hi, runs.key_lo, values=runs.count,
+                  mask=runs.live)
+
+
 def update_sorted(sk: CountSketch, key_hi: jnp.ndarray, key_lo: jnp.ndarray,
                   values: Optional[jnp.ndarray] = None,
                   mask: Optional[jnp.ndarray] = None) -> CountSketch:
-    """Sort-based update: aggregate duplicate keys first, then scatter once.
+    """Sort-based update from raw keys: aggregate duplicates, scatter once.
 
-    sort(keys) → segment boundaries → per-run summed value → scatter of
-    ``num_runs ≤ items`` deduped updates.  Equivalent to :func:`update`.
+    ``sorted_runs`` (sort → segment boundaries → per-run summed value)
+    + :func:`update_runs` (scatter of ``num_runs ≤ items`` deduped
+    updates).  Equivalent to :func:`update`.
     """
-    items = key_hi.shape[0]
-    v = jnp.ones((items,), sk.table.dtype) if values is None \
-        else values.astype(sk.table.dtype)
-    if mask is not None:
-        v = v * mask.astype(sk.table.dtype)
-    # lexicographic sort of (hi, lo); jnp.lexsort sorts by last key first
-    order = jnp.lexsort((key_lo, key_hi))
-    shi, slo, sv = key_hi[order], key_lo[order], v[order]
-    new_run = jnp.concatenate([
-        jnp.ones((1,), bool),
-        (shi[1:] != shi[:-1]) | (slo[1:] != slo[:-1])])
-    run_id = jnp.cumsum(new_run) - 1                          # (items,)
-    run_sum = jax.ops.segment_sum(sv, run_id, num_segments=items)
-    # representative key of each run = first occurrence
-    first_idx = jnp.where(new_run, size=items, fill_value=items - 1)[0]
-    rhi, rlo = shi[first_idx], slo[first_idx]
-    live = jnp.arange(items) < (run_id[-1] + 1)
-    return update(sk, rhi, rlo, values=run_sum, mask=live)
+    runs = sorted_runs(key_hi, key_lo, values=values, mask=mask,
+                       dtype=sk.table.dtype)
+    return update_runs(sk, runs)
 
 
 def estimate(sk: CountSketch, key_hi: jnp.ndarray, key_lo: jnp.ndarray

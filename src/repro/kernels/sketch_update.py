@@ -11,9 +11,12 @@ for all R rows *vectorized* (VPU), then accumulated with an unrolled
 scalar loop (R dynamic stores per item).  The scalar stores serialize on
 real hardware, so this kernel is the **low-latency small-batch path**
 (items ≲ 10⁵ per call: decode-time activation sketching, per-microbatch
-gradient sketches).  The bulk path for 10⁸⁺ items/call is
-``sketch.update_sorted`` (XLA sort → segment-sum → one deduped scatter),
-which turns random access into sequential streaming — see DESIGN.md §3.
+gradient sketches).  The bulk path for 10⁸⁺ items/call is the fused runs
+pipeline — ``candidates.sorted_runs`` (one XLA sort + segment-sum per
+chunk) feeding ``sketch.update_runs`` (one deduped scatter) and the
+reservoir merge alike; ``sketch.update_sorted`` wraps the same pair for
+callers holding raw keys.  Sorting turns random access into sequential
+streaming — see DESIGN.md §3.
 
 VMEM budget: table (R=16, C=2¹⁵) f32 = 2 MiB + block of keys — fits v5e's
 16 MiB VMEM with room for double-buffered inputs; ops.py enforces
