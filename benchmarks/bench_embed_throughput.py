@@ -1,0 +1,150 @@
+"""Embed throughput: tSNE gradient iterations/sec across backends.
+
+The PR-4 tentpole claim, measured on the steady-state iteration the
+optimizer's ``fori_loop`` actually runs:
+
+* ``dense``  — the classic O(N²)-memory matmul gradient (only timed while
+  its (N, N) buffers fit, ``--dense-max``).
+* ``tiled``  — the pure-XLA block-streamed exact gradient: O(block·N)
+  memory but still O(N²) work per iteration.
+* ``sparse`` — kNN-restricted attraction (fixed-shape COO, scatter-free
+  sorted-row reduction) + FFT grid repulsion: O(N·k + G²·log G) per
+  iteration.  This is what turns N = 10⁵–10⁶ representative embeddings
+  from hours into minutes on CPU.
+
+Setup costs (perplexity calibration, the one-off O(N²·D) kNN build) are
+excluded: they are paid once, not per iteration, and the exact backends
+get synthetic calibration stats for the same reason.  The sparse COO is
+drawn with a uniformly random topology — iteration cost depends only on
+the edge COUNT (E = 2·N·k), so this times the same work as a real graph
+while letting the bench scale past the point where the kNN build
+dominates wall-clock.  Backends are timed in interleaved rounds
+(median-of-3 per variant) so machine drift cannot bias the ratios.
+
+    PYTHONPATH=src python -m benchmarks.bench_embed_throughput \
+        --sizes 16384,65536,262144 --json-out BENCH_embed_throughput.json
+
+Emits a JSON trajectory (default path: BENCH_embed_throughput.json at the
+repo root — the repo's tracked iterations/sec baseline); ``run()``
+returns it as a string for benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import interleaved_medians, repo_root_json
+from repro.core import neighbors, tsne
+from repro.core.tsne import PointStats, SparseP
+
+DEFAULT_JSON = repo_root_json("BENCH_embed_throughput.json")
+
+
+def synthetic_stats(n: int, rng) -> PointStats:
+    """Plausible calibration stats without the calibration pass."""
+    beta = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    shift = jnp.zeros((n,), jnp.float32)
+    zp = jnp.asarray(rng.uniform(5.0, 50.0, n).astype(np.float32))
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    return PointStats(beta=beta, shift=shift, zp=zp, w=w)
+
+
+def synthetic_sparse_p(n: int, k: int, rng) -> SparseP:
+    """Random-topology COO with the real layout (symmetric closure of a
+    k-out graph, deduped + sorted + row bounds): E = 2·N·k edges."""
+    srcf = np.repeat(np.arange(n, dtype=np.int32), k)
+    dstf = rng.integers(0, n, size=n * k).astype(np.int32)
+    src = jnp.asarray(np.concatenate([srcf, dstf]))
+    dst = jnp.asarray(np.concatenate([dstf, srcf]))
+    val = jnp.full((2 * n * k,), 0.5 / (n * k), jnp.float32)
+    s, d, v = neighbors.dedupe_edges(src, dst, val)
+    return SparseP(src=s, dst=d, val=v, bounds=neighbors.row_bounds(s, n))
+
+
+def run(sizes: Sequence[int] = (16384, 65536, 262144), block: int = 512,
+        knn: int = 90, grid: int = 128, dense_max: int = 16384,
+        tiled_max: int = 65536, iters: int = 3,
+        json_out: Optional[str] = DEFAULT_JSON) -> str:
+    rng = np.random.default_rng(0)
+    records = []
+    for n in sizes:
+        x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        stats = synthetic_stats(n, rng)
+        sp = synthetic_sparse_p(n, knn, rng)
+
+        sparse_step = jax.jit(
+            lambda y_: tsne.sparse_grad(y_, sp, 1.0, grid_size=grid)[0])
+        drivers = {
+            "sparse": lambda: jax.block_until_ready(sparse_step(y))}
+        skipped = {}
+        for backend, cap in (("tiled", tiled_max), ("dense", dense_max)):
+            if n > cap:
+                skipped[backend] = (f"O(N²) per-iteration cost at N={n} — "
+                                    f"over --{backend}-max={cap}")
+                continue
+            step = jax.jit(lambda y_, _b=backend: tsne.embedding_grad(
+                x, y_, stats, 1.0, backend=_b, block=block)[0])
+            drivers[backend] = \
+                lambda _s=step: jax.block_until_ready(_s(y))
+
+        times = interleaved_medians(drivers, iters=iters)
+        rec = {"bench": "embed_throughput", "n": n, "knn": knn,
+               "grid": grid, "block": block,
+               "edges": int(sp.src.shape[0])}
+        for backend in ("dense", "tiled", "sparse"):
+            ips = 1.0 / times[backend] if backend in times else None
+            rec[f"{backend}_ips"] = ips
+            if backend in skipped:
+                rec[f"{backend}_skipped"] = skipped[backend]
+        if rec["tiled_ips"]:
+            rec["speedup_sparse_vs_tiled"] = \
+                rec["sparse_ips"] / rec["tiled_ips"]
+        records.append(rec)
+        fmt = lambda v: f"{v:8.3f}" if v else "       -"
+        print(f"# embed_throughput N={n:7d} k={knn} G={grid} "
+              f"dense={fmt(rec['dense_ips'])} tiled={fmt(rec['tiled_ips'])} "
+              f"sparse={fmt(rec['sparse_ips'])} iters/s  "
+              f"sparse/tiled={rec.get('speedup_sparse_vs_tiled', '-')}",
+              flush=True)
+
+    common = [r for r in records if r.get("speedup_sparse_vs_tiled")]
+    out = json.dumps({
+        "bench": "embed_throughput",
+        "speedup_sparse_vs_tiled_at_max_common_n":
+            common[-1]["speedup_sparse_vs_tiled"] if common else None,
+        "records": records}, indent=2)
+    if json_out:
+        with open(json_out, "w") as f:
+            f.write(out + "\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="16384,65536,262144")
+    ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--knn", type=int, default=90,
+                    help="sparse fan-out k (default 3·perplexity at the "
+                         "paper's perplexity 30)")
+    ap.add_argument("--grid", type=int, default=128)
+    ap.add_argument("--dense-max", type=int, default=16384,
+                    help="largest N at which the dense backend is timed")
+    ap.add_argument("--tiled-max", type=int, default=65536,
+                    help="largest N at which the tiled backend is timed")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json-out", default=DEFAULT_JSON)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    print(run(sizes=sizes, block=args.block, knn=args.knn, grid=args.grid,
+              dense_max=args.dense_max, tiled_max=args.tiled_max,
+              iters=args.iters, json_out=args.json_out))
+
+
+if __name__ == "__main__":
+    main()

@@ -37,14 +37,13 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import os
-import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import interleaved_medians, repo_root_json
 from repro.core import quantize, sketch as sketch_mod, stream
 from repro.core.candidates import Candidates
 from repro.data.synthetic import MixtureSpec, gaussian_mixture
@@ -52,9 +51,7 @@ from repro.data.synthetic import MixtureSpec, gaussian_mixture
 DIMS = 6
 SPEC = MixtureSpec(dims=DIMS, n_clusters=8, cluster_std=0.02,
                    background_frac=0.3)
-DEFAULT_JSON = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_ingest_throughput.json")
+DEFAULT_JSON = repo_root_json("BENCH_ingest_throughput.json")
 
 
 def _grid(bins: int) -> quantize.GridSpec:
@@ -162,21 +159,6 @@ def _chunk_driver(step_fn, init_fn, pts, chunk: int):
     return once
 
 
-def _interleaved_medians(drivers: dict, iters: int = 3) -> dict:
-    """Time each driver `iters` times in interleaved rounds (all are
-    trace-warmed first); median wall seconds per driver.  Interleaving
-    keeps slow machine drift out of the variant RATIOS."""
-    for once in drivers.values():
-        once()                                 # warm the trace
-    ts: dict = {k: [] for k in drivers}
-    for _ in range(iters):
-        for k, once in drivers.items():
-            t0 = time.perf_counter()
-            once()
-            ts[k].append(time.perf_counter() - t0)
-    return {k: sorted(v)[len(v) // 2] for k, v in ts.items()}
-
-
 def run(sizes: Sequence[int] = (65536, 262144, 1048576),
         chunk: int = 4096, superbatch: int = 16, bins: int = 16,
         rows: int = 8, log2_cols: int = 16, top_k: int = 20480,
@@ -198,7 +180,7 @@ def run(sizes: Sequence[int] = (65536, 262144, 1048576),
                                    superbatch=superbatch)
             jax.block_until_ready(st.sketch.table)
 
-        times = _interleaved_medians({
+        times = interleaved_medians({
             "twosort": _chunk_driver(legacy_jit, fresh, pts, c),
             "fused": _chunk_driver(
                 functools.partial(stream.ingest_chunk, grid=grid),

@@ -3,11 +3,19 @@ peak-buffer measurement (used by the scaling benches to report memory
 trajectories past the point where allocation would OOM)."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List
 
 import jax
 import numpy as np
+
+
+def repo_root_json(name: str) -> str:
+    """Absolute path of a tracked ``BENCH_*.json`` baseline at the repo
+    root — the convention for benchmark trajectories kept under git."""
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), name)
 
 
 def iter_jaxpr_avals(jaxpr):
@@ -64,6 +72,22 @@ def peak_buffer_bytes(fn, *args) -> int:
             best = max(best, int(np.prod(aval.shape, dtype=np.int64))
                        * aval.dtype.itemsize)
     return best
+
+
+def interleaved_medians(drivers: dict, iters: int = 3) -> dict:
+    """Time each zero-arg driver `iters` times in interleaved rounds (all
+    are warmed first); median wall seconds per driver.  Interleaving keeps
+    slow machine drift out of the variant RATIOS — shared by the
+    throughput benches."""
+    for once in drivers.values():
+        once()                                 # warm the trace
+    ts: dict = {k: [] for k in drivers}
+    for _ in range(iters):
+        for k, once in drivers.items():
+            t0 = time.perf_counter()
+            once()
+            ts[k].append(time.perf_counter() - t0)
+    return {k: sorted(v)[len(v) // 2] for k, v in ts.items()}
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

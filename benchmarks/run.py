@@ -10,7 +10,8 @@ Emits CSV blocks (name, value, paper reference) for:
   * collision_model      — paper §III-2 (grid-resolution guidance)
   * pipeline_quality     — paper §IV-1 (contingency-table analog)
   * kernel_paths         — update/estimate implementation comparison
-  * embed_scaling        — tiled vs dense embedding memory/time vs N
+  * embed_scaling        — dense vs tiled vs sparse embedding memory/time vs N
+  * embed_throughput     — tSNE gradient iters/sec: dense vs tiled vs sparse
   * ingest_scaling       — streaming vs one-shot sketch-stage memory vs N
   * ingest_throughput    — points/sec: two-sort vs fused vs fused+superbatch
 """
@@ -32,6 +33,7 @@ def main() -> None:
                             bench_hh_vs_sampling, bench_coverage,
                             bench_collision_model, bench_pipeline_quality,
                             bench_kernels, bench_embed_scaling,
+                            bench_embed_throughput,
                             bench_ingest_scaling, bench_ingest_throughput)
     n_scale = 200_000 if args.fast else 2_000_000
     n_mid = 100_000 if args.fast else 1_000_000
@@ -48,7 +50,19 @@ def main() -> None:
             sizes=(4096, 8192) if args.fast
             else (8192, 16384, 32768, 65536),
             dense_max=8192 if args.fast else 16384,
-            iters=1 if args.fast else 2)),
+            iters=1 if args.fast else 2,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if args.fast else bench_embed_scaling.DEFAULT_JSON)),
+        ("embed_throughput", lambda: bench_embed_throughput.run(
+            sizes=(4096, 8192) if args.fast
+            else (16384, 65536, 262144),
+            knn=16 if args.fast else 90,
+            grid=64 if args.fast else 128,
+            dense_max=4096 if args.fast else 16384,
+            tiled_max=8192 if args.fast else 65536,
+            iters=2 if args.fast else 3,
+            json_out=None if args.fast
+            else bench_embed_throughput.DEFAULT_JSON)),
         ("ingest_scaling", lambda: bench_ingest_scaling.run(
             sizes=(8192, 32768) if args.fast
             else (8192, 65536, 262144, 1048576),

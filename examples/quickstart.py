@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--clusters", type=int, default=8)
     ap.add_argument("--tsne", action="store_true")
+    ap.add_argument("--embed-backend", default="dense",
+                    choices=("dense", "tiled", "pallas", "sparse"),
+                    help="tSNE gradient backend; 'sparse' (kNN attraction "
+                         "+ FFT grid repulsion) is the 10^5+ reps regime")
     ap.add_argument("--top-k", type=int, default=512)
     args = ap.parse_args()
 
@@ -38,7 +42,8 @@ def main():
 
     cfg = pipeline.SnsConfig(
         bins=16, rows=8, log2_cols=14, top_k=args.top_k,
-        embedder="tsne" if args.tsne else "umap", max_replicas=4)
+        embedder="tsne" if args.tsne else "umap", max_replicas=4,
+        embed_backend=args.embed_backend)
     res = pipeline.run(
         cfg, jnp.asarray(pts),
         tsne_cfg=TsneConfig(n_iter=250),

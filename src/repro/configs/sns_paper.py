@@ -27,16 +27,28 @@ CANCER_ERROR_EVAL = SnsConfig(
     embedder="umap", embed_dims=2)
 
 # Beyond the paper: the tiled/pallas embed backends never materialize an
-# (N, N) buffer, so the representative budget is no longer capped at the
-# paper's 2·10^4 — 10^5 heavy hitters embed in O(block·N) memory.
+# (N, N) buffer (10^5 reps fit in O(block·N) memory), and the sparse
+# backend also drops the per-iteration WORK to O(N·k + G²·log G) — kNN
+# attraction + FFT grid repulsion — so 10^5-10^6 representative tSNE runs
+# finish in minutes on CPU (benchmarks/bench_embed_throughput.py).
 CANCER_100K = SnsConfig(
     bins=32, rows=16, log2_cols=20, top_k=100_000,
     replica_scheme="count", max_replicas=4, jitter_frac=0.25,
     embedder="tsne", embed_dims=2,
-    embed_backend="tiled", embed_block=512)
+    embed_backend="sparse", embed_block=512, embed_knn=90, embed_grid=128)
 
 SDSS_100K = SnsConfig(
     bins=28, rows=16, log2_cols=20, top_k=100_000,
     replica_scheme="count", max_replicas=4, jitter_frac=0.25,
     embedder="umap", embed_dims=4,
     embed_backend="tiled", embed_block=2048)
+
+# The million-representative regime the sketch/ingest engine already
+# sustains (PR 2-3): only the sparse backend makes the embed side keep up.
+CANCER_1M = SnsConfig(
+    bins=48, rows=16, log2_cols=22, top_k=1_000_000,
+    replica_scheme="count", max_replicas=1, jitter_frac=0.25,
+    embedder="tsne", embed_dims=2,
+    # embed_knn=0 → 3·perplexity (the calibration needs k comfortably
+    # above the perplexity so the entropy target is reachable)
+    embed_backend="sparse", embed_block=1024, embed_knn=0, embed_grid=256)

@@ -1,0 +1,116 @@
+"""Shared neighbor-graph machinery for the downstream embedders.
+
+Both embedders need the exact kNN graph of the (weighted) heavy-hitter
+representatives — UMAP to build its fuzzy simplicial set, and the sparse
+tSNE backend to restrict perplexity calibration and attraction to the
+kNN support.  The graph build is the only remaining O(N²·D) pass in the
+sub-quadratic embed stage, and it runs *once* at setup, streamed in row
+blocks so peak memory stays O(block · N).
+
+Also hosts the fixed-shape COO edge utilities shared by the sparse
+consumers:
+
+* :func:`reverse_edge_values` — value of each directed edge's reverse
+  (0 if absent), via one sort + binary search (E log E, no (N, N) temp).
+* :func:`dedupe_edges` — canonicalize a COO edge list: lexsort by
+  (src, dst), sum duplicate ordered pairs into the run head, zero the
+  rest.  Fixed shapes throughout, so it composes with jit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tsne import pairwise_sq_dists
+
+
+def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
+
+    With ``block`` set (and < N) the distance matrix is streamed in row
+    chunks of that size — peak memory O(block · N), never (N, N).
+    """
+    n = x.shape[0]
+    if block is None or block >= n:
+        d = pairwise_sq_dists(x)
+        d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+        neg_top, idx = jax.lax.top_k(-d, k)
+        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, pad), (0, 0)]) if pad else x
+    nb = xp.shape[0] // block
+    row_ids = jnp.arange(xp.shape[0])
+    col_ids = jnp.arange(n)
+
+    def chunk(args):
+        xc, idc = args
+        d = pairwise_sq_dists(xc, x)                       # (B, N)
+        d = jnp.where(idc[:, None] == col_ids[None, :], jnp.inf, d)
+        neg_top, idx = jax.lax.top_k(-d, k)
+        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+
+    idx, dist = jax.lax.map(
+        chunk, (xp.reshape(nb, block, -1), row_ids.reshape(nb, block)))
+    return idx.reshape(-1, k)[:n], dist.reshape(-1, k)[:n]
+
+
+def reverse_edge_values(knn_idx: jnp.ndarray, vals_nk: jnp.ndarray,
+                        rows: jnp.ndarray, cols: jnp.ndarray,
+                        vals: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Value of each directed edge's reverse (0 if absent) — sparse.
+
+    Sort-based: pack each edge (i, j) into a scalar key, sort once, and
+    binary-search every reverse key (j, i).  E log E work, O(E) memory —
+    no (N, N) temp.  Keys fit uint32 iff N ≤ 2¹⁶; beyond that we fall back
+    to a gather: the reverse of (i, j) can only live in j's kNN row, so
+    compare knn_idx[j] against i (E·k work, still sparse).
+    """
+    e = rows.shape[0]
+    if n <= (1 << 16):
+        n32 = jnp.uint32(n)
+        fwd = rows.astype(jnp.uint32) * n32 + cols.astype(jnp.uint32)
+        rev = cols.astype(jnp.uint32) * n32 + rows.astype(jnp.uint32)
+        order = jnp.argsort(fwd)
+        sorted_keys = fwd[order]
+        sorted_vals = vals[order]
+        pos = jnp.minimum(jnp.searchsorted(sorted_keys, rev), e - 1)
+        hit = sorted_keys[pos] == rev
+        return jnp.where(hit, sorted_vals[pos], 0.0)
+    rev_rows = knn_idx[cols]                               # (E, k)
+    rev_vals = vals_nk[cols]                               # (E, k)
+    match = rev_rows == rows[:, None]
+    return jnp.sum(jnp.where(match, rev_vals, 0.0), axis=1)
+
+
+def dedupe_edges(src: jnp.ndarray, dst: jnp.ndarray, val: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Canonical COO: sort by (src, dst), fold duplicate ordered pairs.
+
+    Returns (src, dst, val) of the same fixed shape (E,), sorted
+    lexicographically, where each distinct ordered pair carries its total
+    value on the first entry of its run and 0 on the duplicates.  Total
+    mass is preserved exactly; downstream segment-sums are unaffected by
+    the zeroed duplicate slots, while per-pair quantities (Σ p log p, the
+    symmetry check) become well defined.
+    """
+    e = src.shape[0]
+    order = jnp.lexsort((dst, src))
+    s, d, v = src[order], dst[order], val[order]
+    new_run = jnp.concatenate([
+        jnp.ones((1,), bool), (s[1:] != s[:-1]) | (d[1:] != d[:-1])])
+    run_id = jnp.cumsum(new_run) - 1
+    run_sum = jax.ops.segment_sum(v, run_id, num_segments=e)
+    v_out = jnp.where(new_run, run_sum[run_id], 0.0)
+    return s, d, v_out
+
+
+def row_bounds(sorted_src: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Per-row slice boundaries of a src-sorted edge list: row i owns
+    edges [bounds[i], bounds[i+1]).  The invariant consumers like
+    ``tsne.sparse_grad`` build their scatter-free cumsum reduction on."""
+    return jnp.searchsorted(sorted_src,
+                            jnp.arange(n + 1)).astype(jnp.int32)

@@ -56,8 +56,13 @@ class SnsConfig:
     jitter_frac: float = 0.25
     embedder: str = "umap"         # "umap" | "tsne"
     embed_dims: int = 2
-    embed_backend: str = "dense"   # tSNE gradient: "dense"|"tiled"|"pallas"
+    # tSNE gradient: "dense"|"tiled"|"pallas" (exact, O(N²) per iter) or
+    # "sparse" (kNN attraction + FFT grid repulsion, O(N·k + G²logG) —
+    # the N = 10⁵-10⁶ representative regime)
+    embed_backend: str = "dense"
     embed_block: int = 512         # row-block for tiled/pallas tSNE + kNN
+    embed_knn: int = 0             # sparse tSNE: kNN fan-out (0 → 3·perp)
+    embed_grid: int = 128          # sparse tSNE: FFT repulsion grid G
     seed: int = 0
 
 
@@ -200,7 +205,8 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
     if cfg.embedder == "tsne":
         tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
         tc = dataclasses.replace(tc, backend=cfg.embed_backend,
-                                 block=cfg.embed_block)
+                                 block=cfg.embed_block, knn=cfg.embed_knn,
+                                 grid_size=cfg.embed_grid)
         emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj)
     elif cfg.embedder == "umap":
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)

@@ -22,17 +22,26 @@ flash-attention style.
 
 Gradient backends (``TsneConfig.backend`` / ``run_tsne(backend=...)``):
 
-* ``"dense"``  — the classic matmul-shaped O(N²)-memory path.  Fastest at
-  the paper's N ≤ 2·10⁴ where the (N, N) buffers fit.
-* ``"tiled"``  — pure-XLA block streaming: both calibration and the
-  per-iteration gradient touch only (block, N) buffers, so N = 10⁵+
-  representatives fit on any host.  Works on CPU/GPU/TPU unchanged.
-* ``"pallas"`` — the fused two-pass Pallas kernel
-  (``repro.kernels.ops.tsne_step_fused``): Z reduction then force tiles,
-  recomputing P and Q on the fly in VMEM.  Interpret mode is selected
-  automatically off-TPU.
+========== ============== ================= =====================================
+backend    per-iter time  per-iter memory   when to use
+========== ============== ================= =====================================
+``dense``  O(N²)          O(N²)             N ≤ 2·10⁴ (paper regime); exact
+``tiled``  O(N²)          O(block·N)        N ≤ ~10⁵: exact, bounded memory
+``pallas`` O(N²)          O(block²) VMEM    TPU: exact, fused two-pass kernel
+``sparse`` O(N·k+G²logG)  O(N·k + G²)       N = 10⁵–10⁶: kNN attraction + FFT
+                                            grid repulsion (BH/FIt-SNE style)
+========== ============== ================= =====================================
 
-All three agree to fp tolerance (tests/test_embed_backends.py).
+``dense``/``tiled``/``pallas`` compute the exact gradient and agree to fp
+tolerance (tests/test_embed_backends.py).  ``sparse`` is the sub-quadratic
+approximation: attraction restricted to the symmetrized kNN graph
+(perplexity calibrated against kNN distances only — van der Maaten 2014),
+repulsion via cloud-in-cell splatting onto a G×G grid in embedding space,
+one FFT convolution with the (1+r²)⁻¹/(1+r²)⁻² kernels, and a bilinear
+gather back — the Z normalizer falls out of the same grid pass
+(FIt-SNE, Linderman et al. 2019).  On a complete kNN graph (k = N−1) its
+attraction term equals the dense one exactly; repulsion converges to the
+exact field as G grows (tests/test_sparse_tsne.py).
 """
 from __future__ import annotations
 
@@ -44,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-BACKENDS = ("dense", "tiled", "pallas")
+BACKENDS = ("dense", "tiled", "pallas", "sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,8 +69,10 @@ class TsneConfig:
     momentum_switch: int = 125
     min_gain: float = 0.01
     sigma_search_iters: int = 50
-    backend: str = "dense"         # "dense" | "tiled" | "pallas"
+    backend: str = "dense"         # "dense" | "tiled" | "pallas" | "sparse"
     block: int = 512               # row-block for calibration / tiled / pallas
+    knn: int = 0                   # sparse: neighbors per point (0 → 3·perp)
+    grid_size: int = 128           # sparse: FFT repulsion grid, G per axis
 
 
 class PointStats(NamedTuple):
@@ -113,6 +124,31 @@ def _rows_probs_entropy(neg_d: jnp.ndarray, beta: jnp.ndarray
     return p, h
 
 
+def _beta_search(neg_d: jnp.ndarray, target_h: jnp.ndarray,
+                 search_iters: int) -> jnp.ndarray:
+    """Per-row binary search for beta = 1/(2σ²) matching the target entropy.
+
+    neg_d: (B, M) negative squared distances, −inf at invalid pairs.
+    Fixed iteration count → jit-compatible; identical bisection on the
+    full row (dense calibration) and the kNN row (sparse calibration).
+    """
+    nrows = neg_d.shape[0]
+
+    def body(_, state):
+        beta, lo, hi = state
+        _, h = _rows_probs_entropy(neg_d, beta)
+        too_entropic = h > target_h             # entropy high -> raise beta
+        lo = jnp.where(too_entropic, beta, lo)
+        hi = jnp.where(too_entropic, hi, beta)
+        nxt = jnp.where(jnp.isinf(hi), beta * 2.0, 0.5 * (lo + hi))
+        return nxt, lo, hi
+
+    init = (jnp.ones((nrows,)), jnp.zeros((nrows,)),
+            jnp.full((nrows,), jnp.inf))
+    beta, _, _ = jax.lax.fori_loop(0, search_iters, body, init)
+    return beta
+
+
 def calibrate_stats(x: jnp.ndarray, perplexity: float,
                     weights: Optional[jnp.ndarray] = None,
                     search_iters: int = 50, block: int = 512) -> PointStats:
@@ -135,19 +171,7 @@ def calibrate_stats(x: jnp.ndarray, perplexity: float,
         d2 = pairwise_sq_dists(xc, x)               # (B, N) — the only big temp
         valid = idc[:, None] != col_ids[None, :]
         neg_d = jnp.where(valid, -d2, -jnp.inf)
-
-        def body(_, state):
-            beta, lo, hi = state
-            _, h = _rows_probs_entropy(neg_d, beta)
-            too_entropic = h > target_h             # entropy high -> raise beta
-            lo = jnp.where(too_entropic, beta, lo)
-            hi = jnp.where(too_entropic, hi, beta)
-            nxt = jnp.where(jnp.isinf(hi), beta * 2.0, 0.5 * (lo + hi))
-            return nxt, lo, hi
-
-        init = (jnp.ones((block,)), jnp.zeros((block,)),
-                jnp.full((block,), jnp.inf))
-        beta, _, _ = jax.lax.fori_loop(0, search_iters, body, init)
+        beta = _beta_search(neg_d, target_h, search_iters)
         logits = jnp.where(valid, -d2 * beta[:, None], -jnp.inf)
         shift = jnp.max(logits, axis=1)
         zp = jnp.sum(jnp.exp(logits - shift[:, None]), axis=1)
@@ -188,6 +212,219 @@ def calibrate_p(x: jnp.ndarray, perplexity: float,
     stats = calibrate_stats(x, perplexity, weights=weights,
                             search_iters=search_iters, block=block)
     return p_from_stats(x, stats)
+
+
+# --------------------------------------------------------------------------
+# Sparse backend: kNN-restricted attraction + FFT grid repulsion.
+#
+# Per-iteration cost O(N·k + G²·log G) instead of O(N²):
+#   grad_i = 4 [ Σ_j P_ij·num_ij·(y_i−y_j)  −  (1/Z)·Σ_j num²_ij·(y_i−y_j) ]
+# with num_ij = (1+|y_i−y_j|²)⁻¹.  The first sum runs over the symmetrized
+# kNN support only (gather + sorted-row segment reduction over fixed-shape
+# COO edges); the
+# second is an all-pairs sum of a smooth radial kernel, evaluated by
+# splatting unit masses (and y-weighted masses) onto a G×G grid,
+# convolving with (1+r²)⁻² via FFT, and gathering back bilinearly.  The
+# normalizer Z = Σ_{i≠j} num_ij comes from the same grid pass with the
+# (1+r²)⁻¹ kernel.
+# --------------------------------------------------------------------------
+
+class SparseP(NamedTuple):
+    """Symmetrized joint P on the kNN support, fixed-shape COO.
+
+    ``val`` sums to exactly 1 by construction: each directed kNN edge
+    (i→j) with conditional mass c_ij = w_i·pc(j|i) contributes c_ij/2 to
+    the ordered pairs (i, j) AND (j, i), so after folding duplicates the
+    entry for (i, j) holds P_ij = ½(c_ij + c_ji) — the same symmetrization
+    as the dense path, restricted to the kNN union support.  Entries are
+    lexsorted by (src, dst); duplicate slots carry val 0.
+
+    ``bounds[i]:bounds[i+1]`` is row i's slice of the edge list.  The
+    sorted layout is what makes the per-iteration reduction scatter-free:
+    XLA's CPU scatter visits updates one by one (a segment_sum over the
+    edges costs seconds at N·k ~ 10⁷), whereas cumsum + boundary-gather
+    is a vectorized O(E) pass (~100 ms) — see ``sparse_grad``.
+    """
+    src: jnp.ndarray     # (E,) int32, E = 2·N·k, sorted
+    dst: jnp.ndarray     # (E,) int32
+    val: jnp.ndarray     # (E,) float32, Σ val = 1
+    bounds: jnp.ndarray  # (N+1,) int32: row i owns edges [bounds[i], bounds[i+1])
+
+
+def calibrate_stats_knn(knn_dist: jnp.ndarray, perplexity: float,
+                        weights: Optional[jnp.ndarray] = None,
+                        search_iters: int = 50) -> PointStats:
+    """Perplexity calibration against the kNN distances only — O(N·k).
+
+    Same bisection as :func:`calibrate_stats`, but each row's entropy is
+    computed over its k nearest neighbours instead of all N−1 points
+    (the Barnes-Hut/FIt-SNE input approximation: the tail mass beyond the
+    kNN radius is negligible at the calibrated sigma when k ≈ 3·perp).
+    ``shift``/``zp`` normalize pc(j|i) over the kNN row.
+    """
+    n = knn_dist.shape[0]
+    neg_d = -(knn_dist.astype(jnp.float32) ** 2)            # (N, k)
+    beta = _beta_search(neg_d, jnp.log(perplexity), search_iters)
+    logits = neg_d * beta[:, None]
+    shift = jnp.max(logits, axis=1)
+    zp = jnp.sum(jnp.exp(logits - shift[:, None]), axis=1)
+    if weights is not None:
+        w = weights / jnp.sum(weights)
+    else:
+        w = jnp.full((n,), 1.0 / n)
+    return PointStats(beta=beta, shift=shift, zp=zp, w=w)
+
+
+def sparse_p_from_knn(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
+                      perplexity: float,
+                      weights: Optional[jnp.ndarray] = None,
+                      search_iters: int = 50) -> SparseP:
+    """Build the symmetrized weighted COO P from a kNN graph.
+
+    Σ val = 1 exactly (pc rows are normalized and Σ w_i = 1), so no
+    global renormalization pass is needed.
+    """
+    from repro.core import neighbors
+    n, k = knn_idx.shape
+    stats = calibrate_stats_knn(knn_dist, perplexity, weights=weights,
+                                search_iters=search_iters)
+    neg_d = -(knn_dist.astype(jnp.float32) ** 2)
+    pc = jnp.exp(neg_d * stats.beta[:, None] - stats.shift[:, None]) \
+        / stats.zp[:, None]                                  # (N, k)
+    c = (stats.w[:, None] * pc).reshape(-1)                  # Σ c = 1
+    rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    cols = knn_idx.reshape(-1).astype(jnp.int32)
+    src = jnp.concatenate([rows, cols])
+    dst = jnp.concatenate([cols, rows])
+    val = jnp.concatenate([0.5 * c, 0.5 * c])
+    src, dst, val = neighbors.dedupe_edges(src, dst, val)
+    return SparseP(src=src, dst=dst, val=val,
+                   bounds=neighbors.row_bounds(src, n))
+
+
+def build_sparse_p(x: jnp.ndarray, perplexity: float,
+                   k: Optional[int] = None,
+                   weights: Optional[jnp.ndarray] = None,
+                   search_iters: int = 50, block: int = 512) -> SparseP:
+    """kNN graph + kNN calibration + symmetrized COO P — the sparse
+    backend's one-time setup (the only O(N²·D) pass, blocked)."""
+    from repro.core import neighbors
+    n = x.shape[0]
+    if k is None:
+        k = max(8, int(round(3.0 * perplexity)))
+    k = min(k, n - 1)          # a kNN row can never exceed the other points
+    idx, dist = neighbors.knn_graph(x, k, block=block)
+    return sparse_p_from_knn(idx, dist, perplexity, weights=weights,
+                             search_iters=search_iters)
+
+
+def _cic_weights(y: jnp.ndarray, grid_size: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cloud-in-cell cell indices + corner weights for a 2D embedding.
+
+    The grid covers the bounding box with one spare cell of margin on
+    every side and a single isotropic spacing h (the convolution kernel is
+    radial, so cells must be square).  Returns (i0 (N,2) int32,
+    weights (4, N), h scalar).
+    """
+    g = grid_size
+    lo = jnp.min(y, axis=0)
+    span = jnp.maximum(jnp.max(jnp.max(y, axis=0) - lo), 1e-9)
+    h = span / (g - 3)
+    u = (y - lo[None, :]) / h + 1.0                          # ∈ [1, g−2]
+    i0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 2)
+    f = u - i0
+    fx, fy = f[:, 0], f[:, 1]
+    w = jnp.stack([(1 - fx) * (1 - fy), (1 - fx) * fy,
+                   fx * (1 - fy), fx * fy])                  # (4, N)
+    return i0, w, h
+
+
+_CORNERS = ((0, 0), (0, 1), (1, 0), (1, 1))
+
+
+def fft_repulsion(y: jnp.ndarray, grid_size: int = 128
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All-pairs repulsive field + Z by one particle-mesh FFT pass.
+
+    Returns (rep (N, 2), z) with
+        rep_i = Σ_j (1+|y_i−y_j|²)⁻² (y_i − y_j),
+        z     = Σ_{i≠j} (1+|y_i−y_j|²)⁻¹.
+    Splat the masses (1, y_x, y_y) onto a G×G grid (cloud-in-cell),
+    convolve with the radial kernels on a zero-padded 2G×2G domain
+    (circulant embedding → linear convolution), gather bilinearly.  The
+    j = i term cancels in rep (zero displacement) and is subtracted from
+    z in closed form (φ₀(0)·N).
+    """
+    n = y.shape[0]
+    g = grid_size
+    y = y.astype(jnp.float32)
+    i0, w, h = _cic_weights(y, g)
+
+    vals = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]])
+    grid = jnp.zeros((3, g, g), jnp.float32)
+    for ci, (dx, dy) in enumerate(_CORNERS):
+        grid = grid.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
+            vals * w[ci][None, :])
+
+    # radial kernels sampled at grid offsets, circulant-embedded in 2G
+    idx = jnp.arange(2 * g)
+    off = jnp.where(idx <= g, idx, idx - 2 * g).astype(jnp.float32) * h
+    r2 = off[:, None] ** 2 + off[None, :] ** 2
+    k0 = 1.0 / (1.0 + r2)                                    # (1+r²)⁻¹ → Z
+    k1 = k0 * k0                                             # (1+r²)⁻² → force
+
+    pad = jnp.zeros((3, 2 * g, 2 * g), jnp.float32).at[:, :g, :g].set(grid)
+    mf = jnp.fft.rfft2(pad)
+    conv1 = jnp.fft.irfft2(mf * jnp.fft.rfft2(k1)[None],
+                           s=(2 * g, 2 * g))[:, :g, :g]      # φ₁ * (m, my)
+    conv0 = jnp.fft.irfft2(mf[0] * jnp.fft.rfft2(k0),
+                           s=(2 * g, 2 * g))[:g, :g]         # φ₀ * m
+
+    def gather(field):
+        acc = 0.0
+        for ci, (dx, dy) in enumerate(_CORNERS):
+            acc += field[..., i0[:, 0] + dx, i0[:, 1] + dy] * w[ci]
+        return acc
+
+    s1 = gather(conv1[0])                                    # Σ_j φ₁
+    sy = gather(conv1[1:])                                   # (2, N) Σ_j φ₁·y_j
+    z = jnp.maximum(jnp.sum(gather(conv0)) - n, 1e-12)       # drop self terms
+    rep = s1[:, None] * y - sy.T
+    return rep, z
+
+
+def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
+                grid_size: int = 128
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One sparse-backend gradient evaluation: O(N·k + G²·log G).
+
+    Returns (grad (N, 2), KL of the exaggerated sparse P against Q) —
+    the same decomposition the exact backends compute, with the P-sum
+    restricted to the kNN support and the Q-sum on the FFT grid.
+    """
+    exaggeration = jnp.asarray(exaggeration, jnp.float32)
+    ys, yd = y[sp.src], y[sp.dst]
+    diff = ys - yd
+    num = 1.0 / (1.0 + jnp.sum(diff * diff, axis=1))         # (E,)
+    pe = exaggeration * sp.val
+    # row-wise reduction WITHOUT scatter: edges are pre-sorted by src, so
+    # Σ over row i = cumsum difference at the precomputed row bounds —
+    # one vectorized O(E) pass (XLA CPU scatter walks updates serially,
+    # ~100× slower at E ~ 10⁷)
+    contrib = (pe * num)[:, None] * diff                     # (E, 2)
+    cs = jnp.concatenate([jnp.zeros((1, 2), contrib.dtype),
+                          jnp.cumsum(contrib, axis=0)])
+    att = cs[sp.bounds[1:]] - cs[sp.bounds[:-1]]             # (N, 2)
+    rep, z = fft_repulsion(y, grid_size)
+    grad = 4.0 * (att - rep / z)
+    # KL partials over the sparse support (pe = 0 elsewhere):
+    #   KL = Σ pe log pe − Σ pe log num + (Σ pe)·log Z,  Σ pe = exag
+    a = jnp.sum(jnp.where(pe > 0,
+                          pe * jnp.log(jnp.maximum(pe, 1e-37)), 0.0))
+    b = jnp.sum(pe * jnp.log(jnp.maximum(num, 1e-37)))
+    kl = a - b + exaggeration * jnp.log(z)
+    return grad, kl
 
 
 def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -281,6 +518,10 @@ def embedding_grad(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    if backend == "sparse":
+        raise ValueError(
+            "the sparse backend is calibrated from the kNN graph, not "
+            "PointStats — use build_sparse_p(...) once, then sparse_grad()")
     exaggeration = jnp.asarray(exaggeration, jnp.float32)
     if backend == "dense":
         return _grad_and_kl(p_from_stats(x, stats) * exaggeration, y)
@@ -311,18 +552,27 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
               backend: str, interpret: bool
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n = x.shape[0]
-    stats = calibrate_stats(x, cfg.perplexity, weights=weights,
+    if backend == "sparse":
+        sp = build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
+                            weights=weights,
                             search_iters=cfg.sigma_search_iters,
                             block=cfg.block)
-    if backend == "dense":
-        p = p_from_stats(x, stats)
 
         def grad_fn(y, exag):
-            return _grad_and_kl(p * exag, y)
+            return sparse_grad(y, sp, exag, grid_size=cfg.grid_size)
     else:
-        def grad_fn(y, exag):
-            return embedding_grad(x, y, stats, exag, backend=backend,
-                                  block=cfg.block, interpret=interpret)
+        stats = calibrate_stats(x, cfg.perplexity, weights=weights,
+                                search_iters=cfg.sigma_search_iters,
+                                block=cfg.block)
+        if backend == "dense":
+            p = p_from_stats(x, stats)
+
+            def grad_fn(y, exag):
+                return _grad_and_kl(p * exag, y)
+        else:
+            def grad_fn(y, exag):
+                return embedding_grad(x, y, stats, exag, backend=backend,
+                                      block=cfg.block, interpret=interpret)
 
     y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
     state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
@@ -360,6 +610,9 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
     backend = backend or cfg.backend
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    if backend == "sparse" and cfg.dims != 2:
+        raise ValueError(
+            f"sparse backend splats onto a 2D grid; got dims={cfg.dims}")
     interpret = jax.default_backend() != "tpu"
     return _run_tsne(key, x, weights, cfg=cfg, backend=backend,
                      interpret=interpret)

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tsne import pairwise_sq_dists
+from repro.core import neighbors
+from repro.core.neighbors import knn_graph  # noqa: F401  (public re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,66 +62,6 @@ def fit_ab(spread: float, min_dist: float) -> Tuple[float, float]:
 
     (a, b), _ = curve_fit(curve, xs, ys, p0=(1.0, 1.0), maxfev=10_000)
     return float(a), float(b)
-
-
-def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None
-              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
-
-    With ``block`` set (and < N) the distance matrix is streamed in row
-    chunks of that size — peak memory O(block · N), never (N, N).
-    """
-    n = x.shape[0]
-    if block is None or block >= n:
-        d = pairwise_sq_dists(x)
-        d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
-        neg_top, idx = jax.lax.top_k(-d, k)
-        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
-
-    pad = (-n) % block
-    xp = jnp.pad(x, [(0, pad), (0, 0)]) if pad else x
-    nb = xp.shape[0] // block
-    row_ids = jnp.arange(xp.shape[0])
-    col_ids = jnp.arange(n)
-
-    def chunk(args):
-        xc, idc = args
-        d = pairwise_sq_dists(xc, x)                       # (B, N)
-        d = jnp.where(idc[:, None] == col_ids[None, :], jnp.inf, d)
-        neg_top, idx = jax.lax.top_k(-d, k)
-        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
-
-    idx, dist = jax.lax.map(
-        chunk, (xp.reshape(nb, block, -1), row_ids.reshape(nb, block)))
-    return idx.reshape(-1, k)[:n], dist.reshape(-1, k)[:n]
-
-
-def _reverse_membership(knn_idx: jnp.ndarray, memb: jnp.ndarray,
-                        rows: jnp.ndarray, cols: jnp.ndarray,
-                        vals: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Membership of each directed edge's reverse (0 if absent) — sparse.
-
-    Sort-based: pack each edge (i, j) into a scalar key, sort once, and
-    binary-search every reverse key (j, i).  E log E work, O(E) memory —
-    no (N, N) temp.  Keys fit uint32 iff N ≤ 2¹⁶; beyond that we fall back
-    to a gather: the reverse of (i, j) can only live in j's kNN row, so
-    compare knn_idx[j] against i (E·k work, still sparse).
-    """
-    e = rows.shape[0]
-    if n <= (1 << 16):
-        n32 = jnp.uint32(n)
-        fwd = rows.astype(jnp.uint32) * n32 + cols.astype(jnp.uint32)
-        rev = cols.astype(jnp.uint32) * n32 + rows.astype(jnp.uint32)
-        order = jnp.argsort(fwd)
-        sorted_keys = fwd[order]
-        sorted_vals = vals[order]
-        pos = jnp.minimum(jnp.searchsorted(sorted_keys, rev), e - 1)
-        hit = sorted_keys[pos] == rev
-        return jnp.where(hit, sorted_vals[pos], 0.0)
-    rev_rows = knn_idx[cols]                               # (E, k)
-    rev_vals = memb[cols]                                  # (E, k)
-    match = rev_rows == rows[:, None]
-    return jnp.sum(jnp.where(match, rev_vals, 0.0), axis=1)
 
 
 def fuzzy_simplicial_set(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
@@ -162,7 +103,8 @@ def fuzzy_simplicial_set(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
     cols = knn_idx.reshape(-1).astype(jnp.int32)
     vals = memb.reshape(-1)
     if symmetrize == "sparse":
-        rev = _reverse_membership(knn_idx, memb, rows, cols, vals, n)
+        rev = neighbors.reverse_edge_values(knn_idx, memb, rows, cols,
+                                            vals, n)
         edge_vals = vals + rev - vals * rev
     elif symmetrize == "dense":
         # reference path: dense lookup of reverse membership via scatter-max
@@ -206,13 +148,20 @@ def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
         grad_coef = jnp.where(d2 > 0, grad_coef, 0.0)
         att = jnp.clip(grad_coef[:, None] * (ys - yd), -4.0, 4.0) \
             * memb_n[:, None]
-        # repulsive: neg_rate uniform negatives per edge
+        # repulsive: neg_rate uniform negatives per edge.  A draw can hit
+        # the edge's own endpoints — repelling dst would fight the very
+        # attraction this edge just applied (src is harmless: zero diff),
+        # so those samples are masked out rather than resampled (keeps
+        # shapes static; the tiny rate loss matches umap-learn's "skip
+        # self" behaviour in expectation).
         neg = jax.random.randint(kneg, (e, cfg.neg_rate), 0, n)
+        valid = (neg != src[:, None]) & (neg != dst[:, None])
         yn = y[neg]                                           # (E, R, dims)
         dn2 = jnp.sum((ys[:, None, :] - yn) ** 2, axis=2)
         rep_coef = (2.0 * b) / ((0.001 + dn2) * (1.0 + a * dn2 ** b))
         rep = jnp.clip(rep_coef[..., None] * (ys[:, None, :] - yn),
                        -4.0, 4.0) * memb_n[:, None, None]
+        rep = jnp.where(valid[..., None], rep, 0.0)
         delta = jnp.zeros_like(y)
         delta = delta.at[src].add(att + jnp.sum(rep, axis=1))
         delta = delta.at[dst].add(-att)

@@ -1,0 +1,210 @@
+"""Sparse tSNE backend: dense-agreement, FFT-repulsion accuracy, and the
+sub-quadratic jaxpr contract.
+
+The equivalence ladder mirrors the backend's two approximations:
+
+* attraction — on a COMPLETE kNN graph (k = N−1) the sparse COO P equals
+  the dense symmetrized P exactly, so any gradient difference is due to
+  the grid repulsion alone;
+* repulsion — the cloud-in-cell + FFT field is compared against the
+  brute-force O(N²) sum at a fine grid;
+* end to end — run_tsne(backend="sparse") must embed clustered blobs with
+  the same cluster separation as the dense backend, weighted included,
+  and land at a comparable dense-P KL;
+* cost — the per-iteration jaxpr carries no (N, N) buffer and no
+  dot_general at all (the O(N²·D) kNN build is setup, not iteration).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import count_primitive, iter_jaxpr_avals
+from repro.core import neighbors, tsne
+
+
+def _blobs(n=400, d=8, n_clusters=4, seed=0, weighted=False, spread=4.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-spread, spread, size=(n_clusters, d))
+    x = np.concatenate([
+        c + 0.25 * rng.normal(size=(n // n_clusters, d)) for c in centers])
+    labels = np.repeat(np.arange(n_clusters), n // n_clusters)
+    w = jnp.asarray(rng.uniform(1, 100, size=n).astype(np.float32)) \
+        if weighted else None
+    return jnp.asarray(x.astype(np.float32)), labels, w
+
+
+def _coo_to_dense(sp: tsne.SparseP, n: int) -> np.ndarray:
+    m = np.zeros((n, n), np.float64)
+    np.add.at(m, (np.asarray(sp.src), np.asarray(sp.dst)), np.asarray(sp.val))
+    return m
+
+
+# ------------------------------------------------------------- P construction
+@pytest.mark.parametrize("weighted", [False, True])
+def test_sparse_p_is_normalized_symmetric_coo(weighted):
+    x, _, w = _blobs(n=300, weighted=weighted, seed=2)
+    sp = tsne.build_sparse_p(x, 15.0, k=10, weights=w)
+    val = np.asarray(sp.val)
+    assert np.isclose(val.sum(), 1.0, atol=1e-5)
+    assert (val >= 0).all()
+    m = _coo_to_dense(sp, 300)
+    np.testing.assert_allclose(m, m.T, atol=1e-9)            # symmetrized
+    assert (np.diag(m) == 0).all()                           # no self edges
+    # bounds really delimit the per-row slices of the sorted edge list
+    bounds = np.asarray(sp.bounds)
+    src = np.asarray(sp.src)
+    assert bounds[0] == 0 and bounds[-1] == src.shape[0]
+    for i in (0, 150, 299):
+        assert (src[bounds[i]:bounds[i + 1]] == i).all()
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_sparse_p_complete_graph_equals_dense_p(weighted):
+    """k = N−1 removes the kNN truncation: COO P == dense P exactly."""
+    x, _, w = _blobs(n=256, weighted=weighted, seed=3)
+    idx, dist = neighbors.knn_graph(x, 255)
+    sp = tsne.sparse_p_from_knn(idx, dist, 30.0, weights=w)
+    p_dense = np.array(tsne.p_from_stats(
+        x, tsne.calibrate_stats(x, 30.0, weights=w)))
+    p_sparse = _coo_to_dense(sp, 256)
+    np.fill_diagonal(p_dense, 0.0)          # dense path clamps diag to 1e-12
+    assert np.abs(p_sparse - p_dense).max() <= 1e-6 * p_dense.max()
+
+
+def test_calibrate_stats_knn_matches_dense_at_full_k():
+    x, _, _ = _blobs(n=200, seed=4)
+    idx, dist = neighbors.knn_graph(x, 199)
+    a = tsne.calibrate_stats_knn(dist, 20.0)
+    b = tsne.calibrate_stats(x, 20.0)
+    np.testing.assert_allclose(np.asarray(a.beta), np.asarray(b.beta),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.zp), np.asarray(b.zp), rtol=1e-4)
+
+
+# ------------------------------------------------------------- FFT repulsion
+def test_fft_repulsion_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    n = 400
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32) * 3.0)
+    rep, z = tsne.fft_repulsion(y, grid_size=256)
+    d2 = np.asarray(tsne.pairwise_sq_dists(y), np.float64)
+    num = 1.0 / (1.0 + d2)
+    np.fill_diagonal(num, 0.0)
+    num2 = num * num
+    yn = np.asarray(y, np.float64)
+    rep_exact = num2.sum(1)[:, None] * yn - num2 @ yn
+    assert abs(float(z) - num.sum()) <= 2e-3 * num.sum()
+    scale = np.abs(rep_exact).max()
+    assert np.abs(np.asarray(rep) - rep_exact).max() <= 5e-3 * scale
+
+
+def test_fft_repulsion_converges_with_grid():
+    """Halving h must shrink the field error (sanity on the interpolation)."""
+    rng = np.random.default_rng(6)
+    n = 300
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32) * 2.0)
+    d2 = np.asarray(tsne.pairwise_sq_dists(y), np.float64)
+    num2 = (1.0 / (1.0 + d2)) ** 2
+    np.fill_diagonal(num2, 0.0)
+    yn = np.asarray(y, np.float64)
+    rep_exact = num2.sum(1)[:, None] * yn - num2 @ yn
+    errs = []
+    for g in (32, 64, 128):
+        rep, _ = tsne.fft_repulsion(y, grid_size=g)
+        errs.append(np.abs(np.asarray(rep) - rep_exact).max())
+    assert errs[2] < errs[1] < errs[0]
+
+
+# ---------------------------------------------------------------- full grads
+@pytest.mark.parametrize("exag", [1.0, 12.0])
+def test_sparse_grad_matches_dense_on_complete_graph(exag):
+    x, _, w = _blobs(n=256, weighted=True, seed=7)
+    y = jnp.asarray(np.random.default_rng(8).normal(size=(256, 2))
+                    .astype(np.float32))
+    idx, dist = neighbors.knn_graph(x, 255)
+    sp = tsne.sparse_p_from_knn(idx, dist, 30.0, weights=w)
+    stats = tsne.calibrate_stats(x, 30.0, weights=w)
+    g_dense, kl_dense = tsne.embedding_grad(x, y, stats, exag,
+                                            backend="dense")
+    g, kl = tsne.sparse_grad(y, sp, exag, grid_size=256)
+    scale = float(jnp.max(jnp.abs(g_dense)))
+    assert scale > 0
+    assert float(jnp.max(jnp.abs(g - g_dense))) <= 2e-3 * scale
+    assert float(jnp.abs(kl - kl_dense)) <= 1e-2 * max(1.0, abs(float(kl_dense)))
+
+
+def test_embedding_grad_rejects_sparse_backend():
+    x, _, _ = _blobs(n=64)
+    stats = tsne.calibrate_stats(x, 10.0)
+    with pytest.raises(ValueError, match="sparse"):
+        tsne.embedding_grad(x, jnp.zeros((64, 2)), stats, backend="sparse")
+    with pytest.raises(ValueError, match="dims"):
+        tsne.run_tsne(jax.random.key(0), x,
+                      tsne.TsneConfig(dims=3, backend="sparse"))
+
+
+# -------------------------------------------------------------- end to end
+def _centroid_accuracy(y: np.ndarray, labels: np.ndarray) -> float:
+    cents = np.stack([y[labels == c].mean(0) for c in np.unique(labels)])
+    d = ((y[:, None, :] - cents[None]) ** 2).sum(-1)
+    return float((d.argmin(1) == labels).mean())
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_run_tsne_sparse_embeds_blobs_like_dense(weighted):
+    x, labels, w = _blobs(n=400, seed=9, weighted=weighted)
+    cfg = tsne.TsneConfig(n_iter=250, perplexity=20.0, block=128,
+                          grid_size=128)
+    key = jax.random.key(0)
+    y_dense, _ = tsne.run_tsne(key, x, cfg, weights=w, backend="dense")
+    y_sparse, kls = tsne.run_tsne(key, x, cfg, weights=w, backend="sparse")
+    y_sparse = np.asarray(y_sparse)
+    assert np.isfinite(y_sparse).all()
+    assert np.isfinite(np.asarray(kls)).all()
+    acc_d = _centroid_accuracy(np.asarray(y_dense), labels)
+    acc_s = _centroid_accuracy(y_sparse, labels)
+    assert acc_s >= min(0.95, acc_d - 0.02)
+    # both land at a comparable dense-P KL (the sparse run is judged by
+    # the exact objective, not its own truncated one)
+    p = tsne.p_from_stats(x, tsne.calibrate_stats(x, 20.0, weights=w))
+    kl_d = float(tsne.kl_divergence(p, jnp.asarray(y_dense)))
+    kl_s = float(tsne.kl_divergence(p, jnp.asarray(y_sparse)))
+    assert kl_s <= kl_d + 0.75
+
+
+# --------------------------------------------------------------- cost model
+def test_sparse_iteration_jaxpr_subquadratic():
+    """The per-iteration step: no (N, N)-sized buffer, no dot at all."""
+    from benchmarks.bench_embed_throughput import synthetic_sparse_p
+    n, k = 4096, 16
+    sp = synthetic_sparse_p(n, k, np.random.default_rng(10))
+    y = jnp.zeros((n, 2), jnp.float32)
+
+    def step(y_):
+        return tsne.sparse_grad(y_, sp, 1.0, grid_size=128)[0]
+
+    jaxpr = jax.make_jaxpr(step)(y)
+    biggest = max(
+        int(np.prod(a.shape, dtype=np.int64))
+        for a in iter_jaxpr_avals(jaxpr.jaxpr) if hasattr(a, "shape"))
+    assert biggest < n * n // 8, f"buffer of {biggest} elems ~ O(N²)"
+    assert count_primitive(jaxpr.jaxpr, "dot_general") == 0
+
+
+def test_full_sparse_run_tsne_never_allocates_n_by_n():
+    """run_tsne(backend='sparse') end to end (kNN setup included):
+    (block, N) streaming buffers are fine, (N, N) is not."""
+    n = 4096
+    x = jnp.zeros((n, 4), jnp.float32)
+    cfg = tsne.TsneConfig(n_iter=2, block=512, backend="sparse", knn=16,
+                          grid_size=64)
+
+    def full(x_):
+        return tsne.run_tsne(jax.random.key(0), x_, cfg)[0]
+
+    jaxpr = jax.make_jaxpr(full)(x)
+    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
+        shape = getattr(aval, "shape", ())
+        assert not (len(shape) >= 2 and shape[-1] >= n and shape[-2] >= n), \
+            f"(N, N) buffer {shape} in the sparse path"

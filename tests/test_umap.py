@@ -70,3 +70,21 @@ def test_weighted_umap_runs():
     cfg = umap.UmapConfig(n_neighbors=8, n_epochs=50)
     y = np.asarray(umap.run_umap(jax.random.key(1), x, cfg, weights=w))
     assert not np.isnan(y).any()
+
+
+def test_negative_sampling_excludes_edge_endpoints():
+    """Regression: a uniform negative draw can hit the edge's own dst,
+    repelling the pair the attractive step just pulled together.  With
+    N = 2 EVERY draw is an endpoint, so the fixed optimizer must act as
+    pure attraction and collapse the pair; the buggy one repels dst on
+    ~half the draws and keeps the points apart."""
+    edges = jnp.asarray([[0, 1], [1, 0]], jnp.int32)
+    memb = jnp.ones((2,), jnp.float32)
+    # start the pair nearly coincident: pure attraction keeps it collapsed
+    # (final gap ~1e-5), while endpoint-repulsion kicks it apart to O(10)
+    init = jnp.asarray([[0.0, 0.0], [0.01, 0.0]], jnp.float32)
+    cfg = umap.UmapConfig(n_epochs=100, neg_rate=5, learning_rate=1.0)
+    y = np.asarray(umap.optimize_embedding(jax.random.key(0), edges, memb,
+                                           2, cfg, init=init))
+    assert np.isfinite(y).all()
+    assert np.linalg.norm(y[0] - y[1]) < 0.1
