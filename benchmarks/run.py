@@ -11,7 +11,8 @@ Emits CSV blocks (name, value, paper reference) for:
   * pipeline_quality     — paper §IV-1 (contingency-table analog)
   * kernel_paths         — update/estimate implementation comparison
   * embed_scaling        — dense vs tiled vs sparse embedding memory/time vs N
-  * embed_throughput     — tSNE gradient iters/sec: dense vs tiled vs sparse
+  * embed_throughput     — tSNE gradient iters/sec (dense/tiled/sparse) +
+                           UMAP epochs/sec (scatter baseline vs scatter-free)
   * ingest_scaling       — streaming vs one-shot sketch-stage memory vs N
   * ingest_throughput    — points/sec: two-sort vs fused vs fused+superbatch
 """
@@ -61,6 +62,8 @@ def main() -> None:
             dense_max=4096 if args.fast else 16384,
             tiled_max=8192 if args.fast else 65536,
             iters=2 if args.fast else 3,
+            # k=15 is the UMAP acceptance geometry (paper n_neighbors)
+            umap_knn=15, neg_rate=5,
             json_out=None if args.fast
             else bench_embed_throughput.DEFAULT_JSON)),
         ("ingest_scaling", lambda: bench_ingest_scaling.run(

@@ -50,5 +50,10 @@ CANCER_1M = SnsConfig(
     replica_scheme="count", max_replicas=1, jitter_frac=0.25,
     embedder="tsne", embed_dims=2,
     # embed_knn=0 → 3·perplexity (the calibration needs k comfortably
-    # above the perplexity so the entropy target is reachable)
-    embed_backend="sparse", embed_block=1024, embed_knn=0, embed_grid=256)
+    # above the perplexity so the entropy target is reachable).
+    # Adaptive grid: start at G=256 and double with the embedding span
+    # (cell spacing ≤ 0.5 embedding units, G capped at 1024) — a million
+    # representatives spread far wider than the blob regimes a fixed G
+    # was tuned on, and a re-spaced fixed grid would coarsen with span.
+    embed_backend="sparse", embed_block=1024, embed_knn=0, embed_grid=256,
+    embed_grid_interval=0.5, embed_grid_max=1024)

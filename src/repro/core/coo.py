@@ -1,0 +1,124 @@
+"""Shared sorted-COO segment-reduction core for the sparse embedders.
+
+Both sub-quadratic embed engines — the sparse tSNE backend
+(``tsne.SparseP``) and the scatter-free UMAP epoch loop
+(``umap.optimize_embedding``) — reduce per-edge quantities into per-point
+accumulators every optimizer step, over E = O(N·k) fixed-shape COO edges.
+The natural primitive is a scatter-add, but XLA's CPU scatter visits
+updates one at a time: at E ~ 10⁷ a single ``.at[].add`` costs seconds
+where a vectorized pass costs ~100 ms (~100× — measured in
+benchmarks/bench_embed_throughput.py).  This module is the scatter-free
+alternative both consumers share:
+
+* sort the edge list by the reduction key ONCE at setup (``lexsort`` /
+  stable ``argsort``) and precompute the per-row slice boundaries
+  (:func:`row_bounds`);
+* each step, reduce with :func:`segment_reduce` — an O(E) cumulative sum
+  whose per-row totals are differences at the precomputed boundaries.
+  Zero scatter primitives appear in the step jaxpr (regression-pinned in
+  tests/test_sparse_tsne.py and tests/test_umap_scatter_free.py).
+
+For consumers that must reduce over BOTH endpoints of every edge (UMAP:
+the attractive force moves src and dst in opposite directions),
+:func:`edge_layout` additionally builds the dst-sorted ordering and the
+gather permutation between the two orderings, so the second reduction is
+one gather + one more cumsum — still no scatter.
+
+Everything here is shape-static and jit-compatible; the sorts live in the
+one-time setup, never inside the per-iteration jaxpr.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def row_bounds(sorted_ids: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Per-row slice boundaries of a sorted id list: row i owns entries
+    [bounds[i], bounds[i+1]).  The invariant every scatter-free cumsum
+    reduction in this module builds on."""
+    return jnp.searchsorted(sorted_ids,
+                            jnp.arange(n + 1)).astype(jnp.int32)
+
+
+def segment_reduce(vals: jnp.ndarray, bounds: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sums of row-sorted per-edge values — WITHOUT scatter.
+
+    ``vals`` is (E,) or (E, D), ordered so that row i's entries occupy
+    the contiguous slice [bounds[i], bounds[i+1]) (see :func:`row_bounds`).
+    Σ over a row = cumsum difference at the row boundaries: one vectorized
+    O(E) pass, versus XLA CPU scatter's serial update walk (~100× slower
+    at E ~ 10⁷).  Returns (N,) or (N, D).
+    """
+    zero = jnp.zeros((1,) + vals.shape[1:], vals.dtype)
+    cs = jnp.concatenate([zero, jnp.cumsum(vals, axis=0)])
+    return cs[bounds[1:]] - cs[bounds[:-1]]
+
+
+class EdgeLayout(NamedTuple):
+    """Bidirectional reduction plan over a fixed-shape COO edge list.
+
+    Built once at setup (two sorts), consumed every optimizer step with
+    zero scatter primitives:
+
+    * ``src``/``dst`` — the edge list, sorted by ``src`` (stable, so an
+      already-src-sorted input keeps its edge order — this is what lets
+      per-edge RNG streams line up with the pre-layout reference path);
+    * ``src_bounds`` — row slices of the src-sorted order, for reducing
+      per-edge values into their SOURCE points via :func:`segment_reduce`;
+    * ``dst_order``/``dst_bounds`` — gather permutation into the
+      dst-sorted ordering plus its row slices, for reducing the same
+      per-edge values into their DESTINATION points:
+      ``segment_reduce(vals[dst_order], dst_bounds)``.
+    """
+    src: jnp.ndarray         # (E,) int32, sorted ascending
+    dst: jnp.ndarray         # (E,) int32 (src-sorted edge order)
+    src_bounds: jnp.ndarray  # (N+1,) int32
+    dst_order: jnp.ndarray   # (E,) int32: edge order -> dst-sorted order
+    dst_bounds: jnp.ndarray  # (N+1,) int32
+
+
+def edge_layout(src: jnp.ndarray, dst: jnp.ndarray, n: int
+                ) -> Tuple[EdgeLayout, jnp.ndarray]:
+    """Build the bidirectional reduction plan for a COO edge list.
+
+    Returns (layout, order) where ``order`` is the stable src-sort
+    permutation applied to the inputs — gather any per-edge payload with
+    it once (``memb[order]``) to match the layout's edge order.
+    """
+    order = jnp.argsort(src, stable=True)
+    s = src[order].astype(jnp.int32)
+    d = dst[order].astype(jnp.int32)
+    dst_order = jnp.argsort(d, stable=True).astype(jnp.int32)
+    return EdgeLayout(
+        src=s, dst=d,
+        src_bounds=row_bounds(s, n),
+        dst_order=dst_order,
+        dst_bounds=row_bounds(d[dst_order], n)), order
+
+
+def dedupe_edges(src: jnp.ndarray, dst: jnp.ndarray, val: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Canonical COO: sort by (src, dst), fold duplicate ordered pairs.
+
+    Returns (src, dst, val) of the same fixed shape (E,), sorted
+    lexicographically, where each distinct ordered pair carries its total
+    value on the first entry of its run and 0 on the duplicates.  Total
+    mass is preserved exactly; downstream segment-sums are unaffected by
+    the zeroed duplicate slots, while per-pair quantities (Σ p log p, the
+    symmetry check) become well defined.
+
+    Setup-time only (the run-head fold is a segment_sum scatter); the
+    per-iteration reductions go through :func:`segment_reduce`.
+    """
+    e = src.shape[0]
+    order = jnp.lexsort((dst, src))
+    s, d, v = src[order], dst[order], val[order]
+    new_run = jnp.concatenate([
+        jnp.ones((1,), bool), (s[1:] != s[:-1]) | (d[1:] != d[:-1])])
+    run_id = jnp.cumsum(new_run) - 1
+    run_sum = jax.ops.segment_sum(v, run_id, num_segments=e)
+    v_out = jnp.where(new_run, run_sum[run_id], 0.0)
+    return s, d, v_out

@@ -7,14 +7,12 @@ kNN support.  The graph build is the only remaining O(N²·D) pass in the
 sub-quadratic embed stage, and it runs *once* at setup, streamed in row
 blocks so peak memory stays O(block · N).
 
-Also hosts the fixed-shape COO edge utilities shared by the sparse
-consumers:
-
-* :func:`reverse_edge_values` — value of each directed edge's reverse
-  (0 if absent), via one sort + binary search (E log E, no (N, N) temp).
-* :func:`dedupe_edges` — canonicalize a COO edge list: lexsort by
-  (src, dst), sum duplicate ordered pairs into the run head, zero the
-  rest.  Fixed shapes throughout, so it composes with jit.
+Also hosts :func:`reverse_edge_values` — value of each directed edge's
+reverse (0 if absent), via one sort + binary search (E log E, no (N, N)
+temp).  The sorted-COO reduction machinery the sparse consumers build on
+(``dedupe_edges``, ``row_bounds``, ``segment_reduce``, ``edge_layout``)
+lives in :mod:`repro.core.coo`; ``dedupe_edges``/``row_bounds`` are
+re-exported here for the PR-4 import surface.
 """
 from __future__ import annotations
 
@@ -23,6 +21,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.coo import dedupe_edges, row_bounds  # noqa: F401 (re-export)
 from repro.core.tsne import pairwise_sq_dists
 
 
@@ -86,31 +85,3 @@ def reverse_edge_values(knn_idx: jnp.ndarray, vals_nk: jnp.ndarray,
     return jnp.sum(jnp.where(match, rev_vals, 0.0), axis=1)
 
 
-def dedupe_edges(src: jnp.ndarray, dst: jnp.ndarray, val: jnp.ndarray
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Canonical COO: sort by (src, dst), fold duplicate ordered pairs.
-
-    Returns (src, dst, val) of the same fixed shape (E,), sorted
-    lexicographically, where each distinct ordered pair carries its total
-    value on the first entry of its run and 0 on the duplicates.  Total
-    mass is preserved exactly; downstream segment-sums are unaffected by
-    the zeroed duplicate slots, while per-pair quantities (Σ p log p, the
-    symmetry check) become well defined.
-    """
-    e = src.shape[0]
-    order = jnp.lexsort((dst, src))
-    s, d, v = src[order], dst[order], val[order]
-    new_run = jnp.concatenate([
-        jnp.ones((1,), bool), (s[1:] != s[:-1]) | (d[1:] != d[:-1])])
-    run_id = jnp.cumsum(new_run) - 1
-    run_sum = jax.ops.segment_sum(v, run_id, num_segments=e)
-    v_out = jnp.where(new_run, run_sum[run_id], 0.0)
-    return s, d, v_out
-
-
-def row_bounds(sorted_src: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Per-row slice boundaries of a src-sorted edge list: row i owns
-    edges [bounds[i], bounds[i+1]).  The invariant consumers like
-    ``tsne.sparse_grad`` build their scatter-free cumsum reduction on."""
-    return jnp.searchsorted(sorted_src,
-                            jnp.arange(n + 1)).astype(jnp.int32)

@@ -60,9 +60,15 @@ class SnsConfig:
     # "sparse" (kNN attraction + FFT grid repulsion, O(N·k + G²logG) —
     # the N = 10⁵-10⁶ representative regime)
     embed_backend: str = "dense"
-    embed_block: int = 512         # row-block for tiled/pallas tSNE + kNN
+    embed_block: int = 512         # row-block for tiled/pallas tSNE + UMAP kNN
     embed_knn: int = 0             # sparse tSNE: kNN fan-out (0 → 3·perp)
     embed_grid: int = 128          # sparse tSNE: FFT repulsion grid G
+    # sparse tSNE adaptive grid: > 0 = target cell spacing (embed_grid
+    # becomes the starting G and doubles with the embedding span up to
+    # embed_grid_max — FIt-SNE-style, see tsne.TsneConfig.grid_interval)
+    embed_grid_interval: float = 0.0
+    embed_grid_max: int = 1024
+    embed_cic: str = "xla"         # grid splat/gather: "xla" | "pallas"
     seed: int = 0
 
 
@@ -206,9 +212,14 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
         tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
         tc = dataclasses.replace(tc, backend=cfg.embed_backend,
                                  block=cfg.embed_block, knn=cfg.embed_knn,
-                                 grid_size=cfg.embed_grid)
+                                 grid_size=cfg.embed_grid,
+                                 grid_interval=cfg.embed_grid_interval,
+                                 grid_max=cfg.embed_grid_max,
+                                 cic=cfg.embed_cic)
         emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj)
     elif cfg.embedder == "umap":
+        # embed_block bounds the kNN row-block on the UMAP side too
+        # (tests/test_umap_scatter_free.py pins the propagation)
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
         uc = dataclasses.replace(uc, block=cfg.embed_block)
         emb = umap_mod.run_umap(kembed, x, uc, weights=wj)

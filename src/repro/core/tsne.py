@@ -42,6 +42,20 @@ gather back — the Z normalizer falls out of the same grid pass
 (FIt-SNE, Linderman et al. 2019).  On a complete kNN graph (k = N−1) its
 attraction term equals the dense one exactly; repulsion converges to the
 exact field as G grows (tests/test_sparse_tsne.py).
+
+Two further sparse-backend knobs (this PR's follow-ups to the above):
+
+* adaptive grid — ``grid_interval > 0`` fixes the target CELL SPACING
+  instead of the grid size: the optimizer runs in jitted stages and G
+  doubles (grid_size → grid_max) whenever the embedding span outgrows
+  the spacing, FIt-SNE-style, retracing only at doubling boundaries;
+* ``cic="pallas"`` — the cloud-in-cell splat/gather runs as the one-hot
+  matmul Pallas tile in ``repro.kernels.cic`` (MXU on TPU,
+  interpret-mode on CPU) instead of the XLA scatter/gather loop.
+
+The per-edge attraction reduction goes through the shared sorted-COO
+core (:mod:`repro.core.coo`) — the same scatter-free machinery the UMAP
+epoch loop uses.
 """
 from __future__ import annotations
 
@@ -53,7 +67,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import coo
+
 BACKENDS = ("dense", "tiled", "pallas", "sparse")
+CIC_PATHS = ("xla", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +90,14 @@ class TsneConfig:
     block: int = 512               # row-block for calibration / tiled / pallas
     knn: int = 0                   # sparse: neighbors per point (0 → 3·perp)
     grid_size: int = 128           # sparse: FFT repulsion grid, G per axis
+    # adaptive grid (FIt-SNE-style): > 0 turns grid_size into the STARTING
+    # G and fixes the target cell spacing in embedding units — the grid
+    # doubles (up to grid_max) whenever the embedding span outgrows it,
+    # re-jitting only at the doubling boundaries (staged optimizer)
+    grid_interval: float = 0.0     # 0 = fixed-G; > 0 = target cell spacing
+    grid_max: int = 1024           # adaptive: G cap (bounds the FFT cost)
+    adaptive_interval: int = 50    # adaptive: iterations between G checks
+    cic: str = "xla"               # grid splat/gather: "xla" | "pallas"
 
 
 class PointStats(NamedTuple):
@@ -243,7 +268,9 @@ class SparseP(NamedTuple):
     sorted layout is what makes the per-iteration reduction scatter-free:
     XLA's CPU scatter visits updates one by one (a segment_sum over the
     edges costs seconds at N·k ~ 10⁷), whereas cumsum + boundary-gather
-    is a vectorized O(E) pass (~100 ms) — see ``sparse_grad``.
+    is a vectorized O(E) pass (~100 ms) — ``sparse_grad`` reduces through
+    the shared :func:`repro.core.coo.segment_reduce` (the same core the
+    scatter-free UMAP epoch loop uses).
     """
     src: jnp.ndarray     # (E,) int32, E = 2·N·k, sorted
     dst: jnp.ndarray     # (E,) int32
@@ -284,7 +311,6 @@ def sparse_p_from_knn(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
     Σ val = 1 exactly (pc rows are normalized and Σ w_i = 1), so no
     global renormalization pass is needed.
     """
-    from repro.core import neighbors
     n, k = knn_idx.shape
     stats = calibrate_stats_knn(knn_dist, perplexity, weights=weights,
                                 search_iters=search_iters)
@@ -297,9 +323,9 @@ def sparse_p_from_knn(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
     src = jnp.concatenate([rows, cols])
     dst = jnp.concatenate([cols, rows])
     val = jnp.concatenate([0.5 * c, 0.5 * c])
-    src, dst, val = neighbors.dedupe_edges(src, dst, val)
+    src, dst, val = coo.dedupe_edges(src, dst, val)
     return SparseP(src=src, dst=dst, val=val,
-                   bounds=neighbors.row_bounds(src, n))
+                   bounds=coo.row_bounds(src, n))
 
 
 def build_sparse_p(x: jnp.ndarray, perplexity: float,
@@ -320,12 +346,12 @@ def build_sparse_p(x: jnp.ndarray, perplexity: float,
 
 def _cic_weights(y: jnp.ndarray, grid_size: int
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Cloud-in-cell cell indices + corner weights for a 2D embedding.
+    """Cloud-in-cell cell indices + fractional offsets for a 2D embedding.
 
     The grid covers the bounding box with one spare cell of margin on
     every side and a single isotropic spacing h (the convolution kernel is
     radial, so cells must be square).  Returns (i0 (N,2) int32,
-    weights (4, N), h scalar).
+    f (N,2) fractional offsets, h scalar).
     """
     g = grid_size
     lo = jnp.min(y, axis=0)
@@ -334,16 +360,21 @@ def _cic_weights(y: jnp.ndarray, grid_size: int
     u = (y - lo[None, :]) / h + 1.0                          # ∈ [1, g−2]
     i0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 2)
     f = u - i0
+    return i0, f, h
+
+
+def _corner_weights(f: jnp.ndarray) -> jnp.ndarray:
+    """Bilinear corner weights (4, N) from fractional offsets (N, 2)."""
     fx, fy = f[:, 0], f[:, 1]
-    w = jnp.stack([(1 - fx) * (1 - fy), (1 - fx) * fy,
-                   fx * (1 - fy), fx * fy])                  # (4, N)
-    return i0, w, h
+    return jnp.stack([(1 - fx) * (1 - fy), (1 - fx) * fy,
+                      fx * (1 - fy), fx * fy])               # (4, N)
 
 
 _CORNERS = ((0, 0), (0, 1), (1, 0), (1, 1))
 
 
-def fft_repulsion(y: jnp.ndarray, grid_size: int = 128
+def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
+                  cic: str = "xla", interpret: Optional[bool] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-pairs repulsive field + Z by one particle-mesh FFT pass.
 
@@ -355,17 +386,32 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128
     (circulant embedding → linear convolution), gather bilinearly.  The
     j = i term cancels in rep (zero displacement) and is subtracted from
     z in closed form (φ₀(0)·N).
+
+    ``cic`` selects the splat/gather implementation: ``"xla"`` (scatter
+    splat + gather loop) or ``"pallas"`` (the one-hot matmul tile in
+    ``repro.kernels.cic`` — MXU-shaped on TPU, interpret-mode on CPU;
+    ``interpret`` None auto-selects by platform).  The FFT convolution is
+    XLA-native either way.
     """
+    if cic not in CIC_PATHS:
+        raise ValueError(f"unknown cic {cic!r}; want one of {CIC_PATHS}")
     n = y.shape[0]
     g = grid_size
     y = y.astype(jnp.float32)
-    i0, w, h = _cic_weights(y, g)
+    i0, f, h = _cic_weights(y, g)
 
-    vals = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]])
-    grid = jnp.zeros((3, g, g), jnp.float32)
-    for ci, (dx, dy) in enumerate(_CORNERS):
-        grid = grid.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
-            vals * w[ci][None, :])
+    if cic == "pallas":
+        from repro.kernels import ops
+        masses = jnp.stack([jnp.ones((n,), jnp.float32),
+                            y[:, 0], y[:, 1]], axis=1)       # (N, 3)
+        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret)
+    else:
+        w = _corner_weights(f)
+        vals = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]])
+        grid = jnp.zeros((3, g, g), jnp.float32)
+        for ci, (dx, dy) in enumerate(_CORNERS):
+            grid = grid.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
+                vals * w[ci][None, :])
 
     # radial kernels sampled at grid offsets, circulant-embedded in 2G
     idx = jnp.arange(2 * g)
@@ -381,6 +427,16 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128
     conv0 = jnp.fft.irfft2(mf[0] * jnp.fft.rfft2(k0),
                            s=(2 * g, 2 * g))[:g, :g]         # φ₀ * m
 
+    if cic == "pallas":
+        from repro.kernels import ops
+        fields = jnp.concatenate([conv1, conv0[None]], axis=0)
+        got = ops.cic_gather(fields, i0, f, interpret=interpret)  # (N, 4)
+        s1, sy, phi0 = got[:, 0], got[:, 1:3], got[:, 3]
+        z = jnp.maximum(jnp.sum(phi0) - n, 1e-12)
+        return s1[:, None] * y - sy, z
+
+    w = _corner_weights(f)
+
     def gather(field):
         acc = 0.0
         for ci, (dx, dy) in enumerate(_CORNERS):
@@ -395,13 +451,15 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128
 
 
 def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
-                grid_size: int = 128
+                grid_size: int = 128, *, cic: str = "xla",
+                interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One sparse-backend gradient evaluation: O(N·k + G²·log G).
 
     Returns (grad (N, 2), KL of the exaggerated sparse P against Q) —
     the same decomposition the exact backends compute, with the P-sum
-    restricted to the kNN support and the Q-sum on the FFT grid.
+    restricted to the kNN support and the Q-sum on the FFT grid
+    (``cic``/``interpret`` select its splat/gather path).
     """
     exaggeration = jnp.asarray(exaggeration, jnp.float32)
     ys, yd = y[sp.src], y[sp.dst]
@@ -411,12 +469,9 @@ def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
     # row-wise reduction WITHOUT scatter: edges are pre-sorted by src, so
     # Σ over row i = cumsum difference at the precomputed row bounds —
     # one vectorized O(E) pass (XLA CPU scatter walks updates serially,
-    # ~100× slower at E ~ 10⁷)
-    contrib = (pe * num)[:, None] * diff                     # (E, 2)
-    cs = jnp.concatenate([jnp.zeros((1, 2), contrib.dtype),
-                          jnp.cumsum(contrib, axis=0)])
-    att = cs[sp.bounds[1:]] - cs[sp.bounds[:-1]]             # (N, 2)
-    rep, z = fft_repulsion(y, grid_size)
+    # ~100× slower at E ~ 10⁷); shared with the UMAP epoch loop
+    att = coo.segment_reduce((pe * num)[:, None] * diff, sp.bounds)
+    rep, z = fft_repulsion(y, grid_size, cic=cic, interpret=interpret)
     grad = 4.0 * (att - rep / z)
     # KL partials over the sparse support (pe = 0 elsewhere):
     #   KL = Σ pe log pe − Σ pe log num + (Σ pe)·log Z,  Σ pe = exag
@@ -547,6 +602,27 @@ class TsneState(NamedTuple):
     gains: jnp.ndarray
 
 
+def _momentum_update(state: TsneState, grad: jnp.ndarray, mom, cfg: TsneConfig
+                     ) -> TsneState:
+    """One momentum + per-parameter-gains optimizer update (recentered)."""
+    same_sign = jnp.sign(grad) == jnp.sign(state.velocity)
+    gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
+    gains = jnp.maximum(gains, cfg.min_gain)
+    vel = mom * state.velocity - cfg.learning_rate * gains * grad
+    y = state.y + vel
+    y = y - jnp.mean(y, axis=0, keepdims=True)
+    return TsneState(y, vel, gains)
+
+
+def _phase(i, cfg: TsneConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Staged-schedule scalars (exaggeration, momentum) at iteration i."""
+    exag = jnp.where(i < cfg.exaggeration_iters,
+                     cfg.early_exaggeration, 1.0)
+    mom = jnp.where(i < cfg.momentum_switch,
+                    cfg.momentum_start, cfg.momentum_final)
+    return exag, mom
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "backend", "interpret"))
 def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
               backend: str, interpret: bool
@@ -559,7 +635,8 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
                             block=cfg.block)
 
         def grad_fn(y, exag):
-            return sparse_grad(y, sp, exag, grid_size=cfg.grid_size)
+            return sparse_grad(y, sp, exag, grid_size=cfg.grid_size,
+                               cic=cfg.cic, interpret=interpret)
     else:
         stats = calibrate_stats(x, cfg.perplexity, weights=weights,
                                 search_iters=cfg.sigma_search_iters,
@@ -580,21 +657,88 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
 
     def step(i, carry):
         state, kls = carry
-        exag = jnp.where(i < cfg.exaggeration_iters,
-                         cfg.early_exaggeration, 1.0)
-        mom = jnp.where(i < cfg.momentum_switch,
-                        cfg.momentum_start, cfg.momentum_final)
+        exag, mom = _phase(i, cfg)
         grad, kl = grad_fn(state.y, exag)
-        same_sign = jnp.sign(grad) == jnp.sign(state.velocity)
-        gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
-        gains = jnp.maximum(gains, cfg.min_gain)
-        vel = mom * state.velocity - cfg.learning_rate * gains * grad
-        y = state.y + vel
-        y = y - jnp.mean(y, axis=0, keepdims=True)
-        return TsneState(y, vel, gains), kls.at[i].set(kl)
+        return _momentum_update(state, grad, mom, cfg), kls.at[i].set(kl)
 
     state, kls = jax.lax.fori_loop(
         0, cfg.n_iter, step, (state, jnp.zeros((cfg.n_iter,))))
+    return state.y, kls
+
+
+# ------------------------------------------------------------------ adaptive G
+# FIt-SNE grows the interpolation grid with the embedding span instead of
+# re-spacing a fixed G×G grid: the cell spacing h stays (approximately)
+# constant, so the repulsion field's resolution does not degrade as early
+# exaggeration relaxes and the embedding expands 10-100×.  Shapes must be
+# static under jit, so the optimizer runs in STAGES of
+# ``cfg.adaptive_interval`` iterations: each stage is one jitted call with
+# a static G, and between stages the host checks the span and doubles G
+# when span/(G−3) outgrows ``cfg.grid_interval`` (monotone, capped at
+# ``cfg.grid_max``).  G only ever takes values grid_size·2^m, so the whole
+# run retraces at most log₂(grid_max/grid_size) times.
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sparse_setup(key: jax.Array, x: jnp.ndarray, weights, *,
+                  cfg: TsneConfig) -> Tuple[SparseP, TsneState]:
+    """One-time sparse-backend setup: COO P + optimizer init."""
+    sp = build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
+                        weights=weights,
+                        search_iters=cfg.sigma_search_iters,
+                        block=cfg.block)
+    y0 = 1e-4 * jax.random.normal(key, (x.shape[0], cfg.dims))
+    return sp, TsneState(y=y0, velocity=jnp.zeros_like(y0),
+                         gains=jnp.ones_like(y0))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "count", "grid_size",
+                                             "interpret"))
+def _sparse_stage(state: TsneState, kls: jnp.ndarray, sp: SparseP,
+                  it0: jnp.ndarray, *, cfg: TsneConfig, count: int,
+                  grid_size: int, interpret: bool
+                  ) -> Tuple[TsneState, jnp.ndarray]:
+    """``count`` optimizer iterations at a fixed grid size.
+
+    ``it0`` (the global iteration offset) is traced, so the stage function
+    retraces only when (count, grid_size) changes — the schedule scalars
+    still switch at the right global iteration.
+    """
+    def step(i, carry):
+        state, kls = carry
+        it = it0 + i
+        exag, mom = _phase(it, cfg)
+        grad, kl = sparse_grad(state.y, sp, exag, grid_size=grid_size,
+                               cic=cfg.cic, interpret=interpret)
+        return _momentum_update(state, grad, mom, cfg), kls.at[it].set(kl)
+
+    return jax.lax.fori_loop(0, count, step, (state, kls))
+
+
+def _grid_for_span(span: float, g: int, cfg: TsneConfig) -> int:
+    """Smallest doubling of the current G that keeps the cell spacing
+    h = span/(G−3) at or under the target ``cfg.grid_interval``."""
+    while g < cfg.grid_max and span / (g - 3) > cfg.grid_interval:
+        g *= 2
+    return g
+
+
+def _run_tsne_sparse_adaptive(key: jax.Array, x: jnp.ndarray, weights, *,
+                              cfg: TsneConfig, interpret: bool
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Staged sparse optimizer with span-adaptive repulsion grid."""
+    sp, state = _sparse_setup(key, x, weights, cfg=cfg)
+    kls = jnp.zeros((cfg.n_iter,))
+    g = cfg.grid_size
+    it = 0
+    while it < cfg.n_iter:
+        count = min(cfg.adaptive_interval, cfg.n_iter - it)
+        state, kls = _sparse_stage(
+            state, kls, sp, jnp.asarray(it, jnp.int32), cfg=cfg,
+            count=count, grid_size=g, interpret=interpret)
+        it += count
+        span = float(jnp.max(jnp.max(state.y, axis=0)
+                             - jnp.min(state.y, axis=0)))
+        g = _grid_for_span(span, g, cfg)
     return state.y, kls
 
 
@@ -613,6 +757,11 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
     if backend == "sparse" and cfg.dims != 2:
         raise ValueError(
             f"sparse backend splats onto a 2D grid; got dims={cfg.dims}")
+    if cfg.cic not in CIC_PATHS:
+        raise ValueError(f"unknown cic {cfg.cic!r}; want one of {CIC_PATHS}")
     interpret = jax.default_backend() != "tpu"
+    if backend == "sparse" and cfg.grid_interval > 0:
+        return _run_tsne_sparse_adaptive(key, x, weights, cfg=cfg,
+                                         interpret=interpret)
     return _run_tsne(key, x, weights, cfg=cfg, backend=backend,
                      interpret=interpret)

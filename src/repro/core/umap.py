@@ -18,6 +18,22 @@ sample-by-weight schedule) and `neg_rate` uniformly-sampled repulsive
 pairs per edge — all static shapes, all fused by XLA.  This is the same
 estimator, batched; convergence behaviour matches (tested on blobs).
 
+The per-epoch reduction of E = N·k per-edge forces into per-point deltas
+is *scatter-free*: at setup :func:`repro.core.coo.edge_layout` sorts the
+edges by src (stable — the fuzzy-set edge list is already src-sorted, so
+edge order and the per-edge RNG stream are unchanged), precomputes the
+dst-sorted ordering plus the gather permutation between the two, and the
+epoch body reduces each endpoint's contributions with one O(E) cumsum
+differenced at the precomputed row bounds
+(:func:`repro.core.coo.segment_reduce`) — the same machinery as the
+sparse tSNE backend.  XLA's CPU scatter walks updates serially (~100×
+slower at E ~ 10⁷), so replacing the two ``.at[].add`` scatters per epoch
+is what lets ``embedder="umap"`` run at the same N = 10⁵–10⁶
+representative counts as sparse tSNE
+(benchmarks/bench_embed_throughput.py tracks epochs/sec against the
+frozen scatter baseline; the epoch jaxpr is pinned scatter-free in
+tests/test_umap_scatter_free.py).
+
 Weighted extension (SnS): HH counts enter as per-point mass, scaling each
 point's outgoing memberships — representatives of dense cells attract
 proportionally more, mirroring the paper's replica weighting.
@@ -32,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import neighbors
+from repro.core import coo, neighbors
 from repro.core.neighbors import knn_graph  # noqa: F401  (public re-export)
 
 
@@ -50,9 +66,13 @@ class UmapConfig:
     block: int = 4096              # kNN row-block; N <= block -> dense path
 
 
+@functools.lru_cache(maxsize=None)
 def fit_ab(spread: float, min_dist: float) -> Tuple[float, float]:
     """Least-squares fit of 1/(1+a d^{2b}) to the target membership curve
-    (host-side, runs once at setup — same construction as umap-learn)."""
+    (host-side, same construction as umap-learn).  Cached per
+    (spread, min_dist): the call happens at trace time inside the jitted
+    ``optimize_embedding``, so every retrace (new static shape / cfg)
+    would otherwise re-run the scipy ``curve_fit``."""
     from scipy.optimize import curve_fit
     xs = np.linspace(0, 3.0 * spread, 300)
     ys = np.where(xs < min_dist, 1.0, np.exp(-(xs - min_dist) / spread))
@@ -122,49 +142,76 @@ class _OptState(NamedTuple):
     key: jax.Array
 
 
+def epoch_delta(y: jnp.ndarray, layout: coo.EdgeLayout, memb_n: jnp.ndarray,
+                kneg: jax.Array, a: float, b: float, neg_rate: int
+                ) -> jnp.ndarray:
+    """One epoch's per-point SGD delta — the scatter-free epoch body.
+
+    ``layout``/``memb_n`` come from the one-time setup (stable src-sort +
+    dst permutation, memberships gathered into layout order).  Attraction
+    and repulsion are computed per edge, then reduced into per-point
+    deltas by two cumsum-difference segment reductions (src side carries
+    attraction + negative samples, dst side the attraction reaction) —
+    zero scatter primitives in the jaxpr.  Shared by the optimizer's
+    ``fori_loop`` and the throughput bench, so what is timed is exactly
+    what runs.
+    """
+    n = y.shape[0]
+    e = layout.src.shape[0]
+    src, dst = layout.src, layout.dst
+    ys, yd = y[src], y[dst]
+    d2 = jnp.sum((ys - yd) ** 2, axis=1)
+    # attractive: dCE/dy = 2ab d^{2(b-1)} / (1 + a d^{2b}) * (ys - yd)
+    grad_coef = (-2.0 * a * b * d2 ** (b - 1.0)
+                 / (1.0 + a * d2 ** b))
+    grad_coef = jnp.where(d2 > 0, grad_coef, 0.0)
+    att = jnp.clip(grad_coef[:, None] * (ys - yd), -4.0, 4.0) \
+        * memb_n[:, None]
+    # repulsive: neg_rate uniform negatives per edge.  A draw can hit
+    # the edge's own endpoints — repelling dst would fight the very
+    # attraction this edge just applied (src is harmless: zero diff),
+    # so those samples are masked out rather than resampled (keeps
+    # shapes static; the tiny rate loss matches umap-learn's "skip
+    # self" behaviour in expectation).
+    neg = jax.random.randint(kneg, (e, neg_rate), 0, n)
+    valid = (neg != src[:, None]) & (neg != dst[:, None])
+    yn = y[neg]                                           # (E, R, dims)
+    dn2 = jnp.sum((ys[:, None, :] - yn) ** 2, axis=2)
+    rep_coef = (2.0 * b) / ((0.001 + dn2) * (1.0 + a * dn2 ** b))
+    rep = jnp.clip(rep_coef[..., None] * (ys[:, None, :] - yn),
+                   -4.0, 4.0) * memb_n[:, None, None]
+    rep = jnp.where(valid[..., None], rep, 0.0)
+    # scatter-free reduction: src side via the src-sorted bounds, dst
+    # side (the attraction reaction, −att) via the precomputed gather
+    # into dst-sorted order — two O(E) cumsum passes, no .at[].add
+    return coo.segment_reduce(att + jnp.sum(rep, axis=1),
+                              layout.src_bounds) \
+        - coo.segment_reduce(att[layout.dst_order], layout.dst_bounds)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
 def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
                        memb: jnp.ndarray, n: int, cfg: UmapConfig,
                        init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Epoch-batched SGD on the UMAP cross-entropy."""
+    """Epoch-batched SGD on the UMAP cross-entropy, scatter-free.
+
+    Setup builds the bidirectional sorted-COO reduction plan once
+    (:func:`repro.core.coo.edge_layout`); every epoch then runs
+    :func:`epoch_delta` inside one jitted ``fori_loop`` with zero scatter
+    primitives (jaxpr-pinned in tests/test_umap_scatter_free.py)."""
     a, b = fit_ab(cfg.spread, cfg.min_dist)
-    e = edges.shape[0]
     kinit, kloop = jax.random.split(key)
     y0 = init if init is not None else \
         cfg.init_scale * jax.random.uniform(kinit, (n, cfg.dims)) - \
         cfg.init_scale / 2.0
-    src, dst = edges[:, 0], edges[:, 1]
-    memb_n = memb / jnp.maximum(jnp.max(memb), 1e-12)
+    layout, order = coo.edge_layout(edges[:, 0], edges[:, 1], n)
+    memb_n = (memb / jnp.maximum(jnp.max(memb), 1e-12))[order]
 
     def epoch(i, state):
         y, key = state
         key, kneg = jax.random.split(key)
         alpha = cfg.learning_rate * (1.0 - i / cfg.n_epochs)
-        ys, yd = y[src], y[dst]
-        d2 = jnp.sum((ys - yd) ** 2, axis=1)
-        # attractive: dCE/dy = 2ab d^{2(b-1)} / (1 + a d^{2b}) * (ys - yd)
-        grad_coef = (-2.0 * a * b * d2 ** (b - 1.0)
-                     / (1.0 + a * d2 ** b))
-        grad_coef = jnp.where(d2 > 0, grad_coef, 0.0)
-        att = jnp.clip(grad_coef[:, None] * (ys - yd), -4.0, 4.0) \
-            * memb_n[:, None]
-        # repulsive: neg_rate uniform negatives per edge.  A draw can hit
-        # the edge's own endpoints — repelling dst would fight the very
-        # attraction this edge just applied (src is harmless: zero diff),
-        # so those samples are masked out rather than resampled (keeps
-        # shapes static; the tiny rate loss matches umap-learn's "skip
-        # self" behaviour in expectation).
-        neg = jax.random.randint(kneg, (e, cfg.neg_rate), 0, n)
-        valid = (neg != src[:, None]) & (neg != dst[:, None])
-        yn = y[neg]                                           # (E, R, dims)
-        dn2 = jnp.sum((ys[:, None, :] - yn) ** 2, axis=2)
-        rep_coef = (2.0 * b) / ((0.001 + dn2) * (1.0 + a * dn2 ** b))
-        rep = jnp.clip(rep_coef[..., None] * (ys[:, None, :] - yn),
-                       -4.0, 4.0) * memb_n[:, None, None]
-        rep = jnp.where(valid[..., None], rep, 0.0)
-        delta = jnp.zeros_like(y)
-        delta = delta.at[src].add(att + jnp.sum(rep, axis=1))
-        delta = delta.at[dst].add(-att)
+        delta = epoch_delta(y, layout, memb_n, kneg, a, b, cfg.neg_rate)
         return _OptState(y + alpha * delta, key)
 
     state = jax.lax.fori_loop(0, cfg.n_epochs, epoch, _OptState(y0, kloop))

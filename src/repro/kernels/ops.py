@@ -20,6 +20,7 @@ from repro.core import quantize as quantize_mod
 from repro.core.hashing import MulShiftParams
 from repro.core.quantize import GridSpec
 from repro.core.sketch import CountSketch
+from repro.kernels import cic as _cic
 from repro.kernels import hash_points as _hp
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_estimate as _se
@@ -89,6 +90,40 @@ def sketch_estimate_mxu(sk: CountSketch, key_hi: jnp.ndarray,
         sk.table.astype(jnp.float32), bpad, spad,
         block_q=block_q, block_c=block_c, interpret=interpret)
     return jnp.median(est[:, :n], axis=0)
+
+
+def cic_splat(i0: jnp.ndarray, f: jnp.ndarray, vals: jnp.ndarray,
+              grid_size: int, *, block_items: int = 1024,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Cloud-in-cell splat of (N, C) channel masses → (C, G, G) grid.
+
+    Pads the point list to ``block_items`` (padded rows carry zero mass,
+    so they splat nothing).  ``interpret`` None auto-selects by platform.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    i0p, _ = _pad_to(i0, block_items)
+    fp, _ = _pad_to(f, block_items)
+    vp, _ = _pad_to(vals, block_items)        # pad mass 0 → no-op splat
+    return _cic.cic_splat(i0p, fp, vp, grid_size,
+                          block_items=block_items, interpret=interpret)
+
+
+def cic_gather(fields: jnp.ndarray, i0: jnp.ndarray, f: jnp.ndarray, *,
+               block_items: int = 1024,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Bilinear gather of C grid fields at N points → (N, C).
+
+    Pads the point list to ``block_items`` and slices the junk rows off.
+    ``interpret`` None auto-selects by platform.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    i0p, n = _pad_to(i0, block_items)
+    fp, _ = _pad_to(f, block_items)
+    out = _cic.cic_gather(fields, i0p, fp,
+                          block_items=block_items, interpret=interpret)
+    return out[:n]
 
 
 def tsne_step_fused(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,

@@ -110,3 +110,49 @@ def test_tsne_z_kernel_matches_ref():
     from repro.kernels import tsne_forces as tf
     got = tf.tsne_z(y, block=128)
     np.testing.assert_allclose(float(got), float(ref.tsne_z(y)), rtol=1e-5)
+
+
+# ------------------------------------------------------------------- cic tile
+@pytest.mark.parametrize("n,g,block", [
+    (512, 32, 256),
+    (700, 64, 256),            # non-multiple of block -> padding path
+    (128, 16, 128),
+])
+def test_cic_splat_gather_match_xla_loop(n, g, block):
+    """One-hot matmul splat/gather vs the XLA 4-corner scatter/gather."""
+    from repro.core import tsne as tsne_mod
+    rng = np.random.default_rng(7)
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32) * 2.0)
+    i0, f, _ = tsne_mod._cic_weights(y, g)
+    vals = jnp.asarray(rng.uniform(0.5, 2.0, size=(n, 3)).astype(np.float32))
+    got = ops.cic_splat(i0, f, vals, g, block_items=block, interpret=True)
+    w = tsne_mod._corner_weights(f)
+    want = jnp.zeros((3, g, g), jnp.float32)
+    for ci, (dx, dy) in enumerate(tsne_mod._CORNERS):
+        want = want.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
+            vals.T * w[ci][None, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # gather the splatted fields back at the same points
+    got_g = ops.cic_gather(got, i0, f, block_items=block, interpret=True)
+    acc = []
+    for c in range(3):
+        a = 0.0
+        for ci, (dx, dy) in enumerate(tsne_mod._CORNERS):
+            a += want[c, i0[:, 0] + dx, i0[:, 1] + dy] * w[ci]
+        acc.append(a)
+    want_g = jnp.stack(acc, axis=1)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(want_g),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fft_repulsion_pallas_cic_matches_xla():
+    """The full repulsion pass agrees across CIC dispatch paths."""
+    from repro.core import tsne as tsne_mod
+    rng = np.random.default_rng(8)
+    y = jnp.asarray(rng.normal(size=(400, 2)).astype(np.float32) * 3.0)
+    rx, zx = tsne_mod.fft_repulsion(y, 64, cic="xla")
+    rp, zp = tsne_mod.fft_repulsion(y, 64, cic="pallas", interpret=True)
+    scale = float(jnp.max(jnp.abs(rx)))
+    assert float(jnp.max(jnp.abs(rx - rp))) <= 1e-4 * max(scale, 1.0)
+    assert abs(float(zx) - float(zp)) <= 1e-4 * float(zx)

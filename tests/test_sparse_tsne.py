@@ -173,6 +173,44 @@ def test_run_tsne_sparse_embeds_blobs_like_dense(weighted):
     assert kl_s <= kl_d + 0.75
 
 
+# ------------------------------------------------------------- adaptive grid
+def test_adaptive_grid_doubles_only_and_caps():
+    """_grid_for_span: doubling boundaries from the starting G, monotone,
+    capped at grid_max."""
+    cfg = tsne.TsneConfig(grid_size=32, grid_interval=0.5, grid_max=256)
+    assert tsne._grid_for_span(1.0, 32, cfg) == 32      # span fits
+    assert tsne._grid_for_span(20.0, 32, cfg) == 64     # one doubling
+    assert tsne._grid_for_span(50.0, 32, cfg) == 128
+    assert tsne._grid_for_span(1e6, 32, cfg) == 256     # capped
+    assert tsne._grid_for_span(1.0, 128, cfg) == 128    # never shrinks
+
+
+def test_run_tsne_adaptive_grid_matches_fixed_grid_quality():
+    """Starting from a coarse G with a fixed cell-spacing target, the
+    staged adaptive optimizer must land at the same blob quality as the
+    fixed-G run — within the fixed-G test's own tolerances."""
+    x, labels, w = _blobs(n=400, seed=9, weighted=True)
+    key = jax.random.key(0)
+    fixed = tsne.TsneConfig(n_iter=250, perplexity=20.0, block=128,
+                            grid_size=128)
+    adaptive = tsne.TsneConfig(n_iter=250, perplexity=20.0, block=128,
+                               grid_size=32, grid_interval=0.5,
+                               grid_max=256, adaptive_interval=50)
+    y_fixed, _ = tsne.run_tsne(key, x, fixed, weights=w, backend="sparse")
+    y_adapt, kls = tsne.run_tsne(key, x, adaptive, weights=w,
+                                 backend="sparse")
+    y_adapt = np.asarray(y_adapt)
+    assert np.isfinite(y_adapt).all()
+    assert np.isfinite(np.asarray(kls)).all()
+    acc_f = _centroid_accuracy(np.asarray(y_fixed), labels)
+    acc_a = _centroid_accuracy(y_adapt, labels)
+    assert acc_a >= min(0.95, acc_f - 0.02)
+    p = tsne.p_from_stats(x, tsne.calibrate_stats(x, 20.0, weights=w))
+    kl_f = float(tsne.kl_divergence(p, jnp.asarray(y_fixed)))
+    kl_a = float(tsne.kl_divergence(p, jnp.asarray(y_adapt)))
+    assert kl_a <= kl_f + 0.75
+
+
 # --------------------------------------------------------------- cost model
 def test_sparse_iteration_jaxpr_subquadratic():
     """The per-iteration step: no (N, N)-sized buffer, no dot at all."""

@@ -1,0 +1,210 @@
+"""Scatter-free UMAP epoch engine: equivalence, jaxpr contract, wiring.
+
+The epoch rewrite swaps the two `.at[].add` scatters per epoch for the
+shared sorted-COO cumsum reduction (repro.core.coo) — the contract is:
+
+* equivalence — against the PR-4 scatter epoch, FROZEN verbatim in
+  benchmarks/bench_embed_throughput.py, the full optimizer trajectory
+  matches to fp tolerance for the same key (the fuzzy-set edge list is
+  src-sorted, so the stable setup sort preserves edge order and the
+  per-edge negative-sample stream lines up draw for draw);
+* cost — the epoch-loop jaxpr carries ZERO scatter primitives and no
+  (N, N)- or (E, N)-sized buffer (the biggest temp is the (E, R, dims)
+  negative-sample block);
+* shared core — repro.core.coo reduces arbitrary src/dst multisets
+  correctly (property-tested against np.add.at);
+* wiring — SnsConfig.embed_block reaches UmapConfig.block through
+  pipeline.embed_stage (regression: the knob that bounds kNN memory).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from benchmarks.bench_embed_throughput import (synthetic_umap_edges,
+                                               umap_scatter_epoch_delta)
+from benchmarks.common import count_primitive, iter_jaxpr_avals
+from repro.core import coo, pipeline, umap
+
+
+# ------------------------------------------------------------- shared core
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 60),
+       e=st.integers(1, 300))
+@settings(max_examples=25, deadline=None)
+def test_coo_segment_reduce_matches_scatter(seed, n, e):
+    """edge_layout + segment_reduce == np.add.at on both endpoints, for
+    arbitrary (unsorted, duplicate-heavy) edge multisets."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    vals = rng.normal(size=(e, 2)).astype(np.float32)
+    layout, order = coo.edge_layout(jnp.asarray(src), jnp.asarray(dst), n)
+    v = jnp.asarray(vals)[order]
+    by_src = np.asarray(coo.segment_reduce(v, layout.src_bounds))
+    by_dst = np.asarray(coo.segment_reduce(v[layout.dst_order],
+                                           layout.dst_bounds))
+    ref_src = np.zeros((n, 2), np.float64)
+    ref_dst = np.zeros((n, 2), np.float64)
+    np.add.at(ref_src, src, vals.astype(np.float64))
+    np.add.at(ref_dst, dst, vals.astype(np.float64))
+    scale = max(1.0, np.abs(ref_src).max(), np.abs(ref_dst).max())
+    assert np.abs(by_src - ref_src).max() <= 1e-4 * scale
+    assert np.abs(by_dst - ref_dst).max() <= 1e-4 * scale
+
+
+def test_edge_layout_stable_on_sorted_input():
+    """A src-sorted edge list must keep its order (identity permutation) —
+    this is what aligns the per-edge RNG stream with the frozen baseline."""
+    n, k = 40, 4
+    rng = np.random.default_rng(3)
+    edges, _ = synthetic_umap_edges(n, k, rng)
+    layout, order = coo.edge_layout(edges[:, 0], edges[:, 1], n)
+    np.testing.assert_array_equal(np.asarray(order), np.arange(n * k))
+    np.testing.assert_array_equal(np.asarray(layout.src),
+                                  np.asarray(edges[:, 0]))
+    np.testing.assert_array_equal(np.asarray(layout.dst),
+                                  np.asarray(edges[:, 1]))
+
+
+# ------------------------------------------------------- epoch equivalence
+@pytest.mark.parametrize("seed,n,k", [(0, 64, 4), (1, 128, 7), (2, 31, 3)])
+def test_scatter_free_epoch_matches_frozen_scatter_along_trajectory(seed, n,
+                                                                    k):
+    """At EVERY state the optimizer visits, the scatter-free epoch delta
+    equals the frozen PR-4 scatter delta for the same negative-sample key
+    (identical draws — the src-sorted edge list keeps edge order, so only
+    the reduction's summation order differs).  Compared per epoch rather
+    than at the trajectory's end: the SGD dynamics amplify fp noise
+    through the near-singular 1/(0.001+d²) repulsion, so end-state
+    agreement is not a well-posed contract, per-step agreement is."""
+    rng = np.random.default_rng(seed)
+    edges, memb = synthetic_umap_edges(n, k, rng)
+    cfg = umap.UmapConfig(n_epochs=12, neg_rate=5, learning_rate=1.0)
+    a, b = umap.fit_ab(cfg.spread, cfg.min_dist)
+    memb_n = memb / jnp.maximum(jnp.max(memb), 1e-12)
+    layout, order = coo.edge_layout(edges[:, 0], edges[:, 1], n)
+    memb_s = memb_n[order]
+    src, dst = edges[:, 0], edges[:, 1]
+    y = jnp.asarray(rng.normal(size=(n, cfg.dims)).astype(np.float32))
+    kloop = jax.random.key(seed)
+    for i in range(cfg.n_epochs):
+        kloop, kneg = jax.random.split(kloop)
+        scat = umap_scatter_epoch_delta(y, kneg, src, dst, memb_n, a, b,
+                                        cfg.neg_rate)
+        free = umap.epoch_delta(y, layout, memb_s, kneg, a, b, cfg.neg_rate)
+        err = float(jnp.max(jnp.abs(free - scat)))
+        scale = max(1.0, float(jnp.max(jnp.abs(scat))))
+        assert err <= 1e-4 * scale, f"epoch {i}: delta err {err}"
+        alpha = cfg.learning_rate * (1.0 - i / cfg.n_epochs)
+        y = y + alpha * scat
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 150),
+       k=st.integers(1, 8), neg_rate=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_single_epoch_delta_matches_scatter_delta(seed, n, k, neg_rate):
+    """Property: one epoch delta, same kneg — scatter-free == scatter to
+    fp tolerance for arbitrary edge geometry and negative-sample rate."""
+    k = min(k, n - 1)
+    rng = np.random.default_rng(seed)
+    edges, memb = synthetic_umap_edges(n, k, rng)
+    a, b = umap.fit_ab(1.0, 0.1)
+    memb_n = memb / jnp.maximum(jnp.max(memb), 1e-12)
+    layout, order = coo.edge_layout(edges[:, 0], edges[:, 1], n)
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    kneg = jax.random.key(seed)
+    free = np.asarray(umap.epoch_delta(y, layout, memb_n[order], kneg,
+                                       a, b, neg_rate))
+    scat = np.asarray(umap_scatter_epoch_delta(y, kneg, edges[:, 0],
+                                               edges[:, 1], memb_n, a, b,
+                                               neg_rate))
+    assert np.abs(free - scat).max() <= 1e-4 * max(1.0, np.abs(scat).max())
+
+
+# --------------------------------------------------------------- cost model
+def test_umap_epoch_jaxpr_scatter_free_and_subquadratic():
+    """The jitted optimizer (setup + epoch fori_loop): ZERO scatter
+    primitives of any flavour, and no (N, N)/(E, N) buffer — the biggest
+    temp is the (E, neg_rate, dims) negative-sample block."""
+    n, k = 1024, 8
+    rng = np.random.default_rng(10)
+    edges, memb = synthetic_umap_edges(n, k, rng)
+    cfg = umap.UmapConfig(n_epochs=5)
+
+    def full(edges_, memb_):
+        return umap.optimize_embedding(jax.random.key(0), edges_, memb_,
+                                       n, cfg)
+
+    jaxpr = jax.make_jaxpr(full)(edges, memb)
+    for prim in ("scatter-add", "scatter", "scatter-mul", "scatter-max"):
+        assert count_primitive(jaxpr.jaxpr, prim) == 0, \
+            f"{prim} in the scatter-free epoch engine"
+    e = n * k
+    biggest = max(
+        int(np.prod(a.shape, dtype=np.int64))
+        for a in iter_jaxpr_avals(jaxpr.jaxpr) if hasattr(a, "shape"))
+    assert biggest <= e * cfg.neg_rate * cfg.dims, \
+        f"buffer of {biggest} elems beyond the negative-sample block"
+    assert biggest < n * n // 8, f"buffer of {biggest} elems ~ O(N²)"
+    assert biggest < e * n // 8, f"buffer of {biggest} elems ~ O(E·N)"
+
+
+# ------------------------------------------------------------------- wiring
+def test_embed_stage_wires_embed_block_into_umap_cfg(monkeypatch):
+    """SnsConfig.embed_block must reach UmapConfig.block (it bounds the
+    kNN row-block — the knob that keeps the graph build O(block·N))."""
+    seen = {}
+
+    def fake_run_umap(key, x, cfg, weights=None):
+        seen["cfg"] = cfg
+        return jnp.zeros((x.shape[0], cfg.dims))
+
+    monkeypatch.setattr(pipeline.umap_mod, "run_umap", fake_run_umap)
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(0, 1, size=(512, 3)).astype(np.float32))
+    cfg = pipeline.SnsConfig(bins=8, rows=4, log2_cols=10, top_k=32,
+                             embedder="umap", embed_block=123)
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    pipeline.embed_stage(cfg, grid, hh)
+    assert seen["cfg"].block == 123
+
+
+def test_embed_stage_wires_adaptive_grid_into_tsne_cfg(monkeypatch):
+    """The new adaptive-grid / CIC knobs must reach TsneConfig too."""
+    seen = {}
+
+    def fake_run_tsne(key, x, cfg, weights=None, backend=None):
+        seen["cfg"] = cfg
+        return jnp.zeros((x.shape[0], cfg.dims)), jnp.zeros((cfg.n_iter,))
+
+    monkeypatch.setattr(pipeline.tsne_mod, "run_tsne", fake_run_tsne)
+    rng = np.random.default_rng(1)
+    pts = jnp.asarray(rng.uniform(0, 1, size=(512, 3)).astype(np.float32))
+    cfg = pipeline.SnsConfig(bins=8, rows=4, log2_cols=10, top_k=32,
+                             embedder="tsne", embed_backend="sparse",
+                             embed_grid=64, embed_grid_interval=0.25,
+                             embed_grid_max=512, embed_cic="pallas")
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    pipeline.embed_stage(cfg, grid, hh)
+    tc = seen["cfg"]
+    assert (tc.grid_size, tc.grid_interval, tc.grid_max, tc.cic) == \
+        (64, 0.25, 512, "pallas")
+
+
+def test_run_umap_end_to_end_stays_scatter_free_on_blobs():
+    """Sanity: the rewritten engine still embeds structure (fast check —
+    the full quality contract lives in test_umap.py's slow blob test)."""
+    rng = np.random.default_rng(5)
+    x = np.concatenate([
+        rng.normal(size=(40, 4)).astype(np.float32) * 0.05,
+        rng.normal(size=(40, 4)).astype(np.float32) * 0.05 + 3.0])
+    cfg = umap.UmapConfig(n_neighbors=8, n_epochs=80)
+    y = np.asarray(umap.run_umap(jax.random.key(0), jnp.asarray(x), cfg))
+    assert np.isfinite(y).all()
+    gap = np.linalg.norm(y[:40].mean(0) - y[40:].mean(0))
+    intra = max(np.linalg.norm(y[:40] - y[:40].mean(0), axis=1).mean(),
+                np.linalg.norm(y[40:] - y[40:].mean(0), axis=1).mean())
+    assert gap > 1.5 * intra
