@@ -15,6 +15,8 @@ Emits CSV blocks (name, value, paper reference) for:
                            UMAP epochs/sec (scatter baseline vs scatter-free)
   * ingest_scaling       — streaming vs one-shot sketch-stage memory vs N
   * ingest_throughput    — points/sec: two-sort vs fused vs fused+superbatch
+  * embed_mesh           — sharded embed stage iters/sec vs device count
+                           (one subprocess per D, virtual CPU devices)
 """
 from __future__ import annotations
 
@@ -34,7 +36,7 @@ def main() -> None:
                             bench_hh_vs_sampling, bench_coverage,
                             bench_collision_model, bench_pipeline_quality,
                             bench_kernels, bench_embed_scaling,
-                            bench_embed_throughput,
+                            bench_embed_throughput, bench_embed_mesh,
                             bench_ingest_scaling, bench_ingest_throughput)
     n_scale = 200_000 if args.fast else 2_000_000
     n_mid = 100_000 if args.fast else 1_000_000
@@ -71,6 +73,15 @@ def main() -> None:
             else (8192, 65536, 262144, 1048576),
             chunk=4096 if args.fast else 8192,
             oneshot_time_max=32768 if args.fast else 262144)),
+        ("embed_mesh", lambda: bench_embed_mesh.run(
+            devices=(1, 2) if args.fast else (1, 2, 4, 8),
+            n=4096 if args.fast else 20_000,
+            knn=16 if args.fast else 32,
+            grid=64 if args.fast else 128,
+            tsne_iters=5 if args.fast else 20,
+            umap_epochs=5 if args.fast else 20,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if args.fast else "__default__")),
         ("ingest_throughput", lambda: bench_ingest_throughput.run(
             sizes=(16384, 65536) if args.fast
             else (65536, 262144, 1048576),

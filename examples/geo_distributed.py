@@ -1,12 +1,22 @@
-"""Geo-distributed sketching: the paper's multi-data-center topology.
+"""Geo-distributed Sketch-and-Scale: the full pipeline on a device mesh.
 
     PYTHONPATH=src python examples/geo_distributed.py
 
-Simulates 2 "data centers" x 4 edge workers (8 host devices) on a
-("pod", "data") mesh.  Each worker sketches ONLY its local shard — raw
-points never cross the pod axis; the fixed-size sketches merge
-hierarchically (psum over "data" = intra-DC ICI, then "pod" = inter-DC
-WAN) and every site recovers the identical global heavy-hitter list.
+Simulates 2 "data centers" x 4 edge workers (8 host devices).  The whole
+paper pipeline runs without leaving ``shard_map``:
+
+  ingest — each worker sketches ONLY its local shard on the ("pod",
+    "data") mesh; raw points never cross the pod axis, the fixed-size
+    sketches merge hierarchically (psum over "data" = intra-DC ICI, then
+    "pod" = inter-DC WAN) and every site recovers the identical global
+    heavy-hitter list (``core.geo``);
+  embed — the weighted heavy-hitter representatives are embedded with the
+    optimizer row-block-sharded over a 1-D embed mesh of the same 8
+    devices (``SnsConfig.embed_mesh`` → ``core.tsne``/``core.umap`` under
+    ``shard_map``): per iteration one all_gather of the block positions +
+    psums of fixed-size partials, no cross-device scatter.
+
+Mesh/axis plumbing both stages share lives in ``core.mesh``.
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -19,7 +29,8 @@ import jax                                                     # noqa: E402
 import jax.numpy as jnp                                        # noqa: E402
 import numpy as np                                             # noqa: E402
 
-from repro.core import geo, quantize                           # noqa: E402
+from repro.core import geo, pipeline, quantize                 # noqa: E402
+from repro.core import mesh as mesh_mod                        # noqa: E402
 from repro.data.synthetic import (MixtureSpec,                 # noqa: E402
                                   clustered_points_sharded)
 
@@ -37,7 +48,8 @@ def main():
     print(f"[data] 8 x {n_per} points, one shard per worker "
           f"(same underlying mixture, disjoint draws)")
 
-    # every site must agree on the grid: fixed box, no data pass
+    # ---- ingest → HH: every site must agree on the grid (fixed box, no
+    # data pass); sketching + hierarchical merge run inside shard_map
     grid = quantize.GridSpec(dims=spec.dims, bins=16,
                              lo=tuple([0.0] * spec.dims),
                              hi=tuple([1.0] * spec.dims))
@@ -57,6 +69,21 @@ def main():
     counts = np.asarray(res.hh.count)[:5]
     for c, n in zip(centers, counts):
         print(f"   cell@{np.round(c, 2).tolist()}  count={n:.0f}")
+
+    # ---- embed: the same 8 devices re-form as a 1-D embed mesh and the
+    # UMAP epoch loop runs row-block-sharded under shard_map
+    embed_mesh = mesh_mod.make_embed_mesh(8)
+    cfg = pipeline.SnsConfig(top_k=256, embedder="umap", embed_block=512,
+                             max_replicas=1, embed_mesh=embed_mesh)
+    reps, emb, w, _ = pipeline.embed_stage(cfg, grid, res.hh)
+    print(f"[embed] {emb.shape[0]} weighted representatives → "
+          f"{emb.shape[1]}D, optimizer row-block-sharded over "
+          f"{mesh_mod.axis_size(embed_mesh, mesh_mod.EMBED_AXIS)} devices "
+          f"('{mesh_mod.EMBED_AXIS}' axis)")
+    print(f"[embed] span x={float(emb[:, 0].min()):+.2f}"
+          f"..{float(emb[:, 0].max()):+.2f} "
+          f"y={float(emb[:, 1].min()):+.2f}..{float(emb[:, 1].max()):+.2f}, "
+          f"total weight {float(np.sum(w)):.0f}")
 
 
 if __name__ == "__main__":

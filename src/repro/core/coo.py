@@ -24,6 +24,14 @@ the attractive force moves src and dst in opposite directions),
 gather permutation between the two orderings, so the second reduction is
 one gather + one more cumsum — still no scatter.
 
+For the mesh-parallel embed stage, :class:`ShardedEdgeLayout` row-block
+shards the same machinery: each device owns a contiguous src-row range
+(and, because the edge list is src-sorted, a CONTIGUOUS padded slice of
+the edge array), runs the identical local cumsum-difference reduction
+over its slice, and cross-block dst contributions travel as one ``psum``
+of per-block full-length partials — still zero scatter primitives,
+per-device (tests/test_mesh_embed.py pins the sharded jaxpr).
+
 Everything here is shape-static and jit-compatible; the sorts live in the
 one-time setup, never inside the per-iteration jaxpr.
 """
@@ -33,6 +41,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def row_bounds(sorted_ids: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -97,6 +106,118 @@ def edge_layout(src: jnp.ndarray, dst: jnp.ndarray, n: int
         src_bounds=row_bounds(s, n),
         dst_order=dst_order,
         dst_bounds=row_bounds(d[dst_order], n)), order
+
+
+class ShardedEdgeLayout(NamedTuple):
+    """Row-block-sharded reduction plan over a src-sorted COO edge list.
+
+    Device s owns the contiguous global row range
+    [s·rows_per, (s+1)·rows_per) (``rows_per`` = ``src_bounds.shape[1]−1``;
+    the last block may contain padded rows beyond N).  Because the input
+    edge list is sorted by src, each block's edges are a CONTIGUOUS slice
+    of the global array; slices are padded to the max per-block edge count
+    Ep so every leading-axis entry has the same shape and the whole layout
+    enters ``shard_map`` with ``P(axis)`` in-specs (device s sees its own
+    (Ep,)-rows after squeezing).
+
+    Per-device reduction contract (all scatter-free, see
+    tests/test_mesh_embed.py for the jaxpr pin):
+
+    * src side — ``segment_reduce(vals, src_bounds[s])`` over LOCAL row
+      ids (``src − s·rows_per``) gives the block's (rows_per, ...) sums;
+    * dst side — ``segment_reduce(vals[dst_order[s]], dst_bounds[s])``
+      gives a FULL-LENGTH (n_padded, ...) per-block partial over GLOBAL
+      dst rows; one ``psum`` over the mesh axis totals the cross-block
+      contributions (no cross-device scatter anywhere);
+    * padded edge slots repeat the block's last real edge with
+      ``edge_mask`` False — gather any payload through
+      :func:`shard_payload`, which zeroes them, so they vanish from every
+      linear reduction;
+    * ``edge_ids`` maps each slot back to its global edge index — the
+      hook that keeps per-edge RNG streams draw-for-draw aligned with the
+      single-device path (draw globally, gather by ``edge_ids``).
+    """
+    src: jnp.ndarray         # (S, Ep) int32 global src ids, sorted per block
+    dst: jnp.ndarray         # (S, Ep) int32 global dst ids
+    edge_ids: jnp.ndarray    # (S, Ep) int32 global edge index of each slot
+    edge_mask: jnp.ndarray   # (S, Ep) bool, False on padded slots
+    src_bounds: jnp.ndarray  # (S, rows_per+1) int32, LOCAL-row slices
+    dst_order: jnp.ndarray   # (S, Ep) int32: block order -> dst-sorted order
+    dst_bounds: jnp.ndarray  # (S, n_padded+1) int32, GLOBAL-row slices
+    row_offset: jnp.ndarray  # (S,) int32 first global row of each block
+
+    @property
+    def n_shards(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.src_bounds.shape[1] - 1
+
+    @property
+    def n_padded(self) -> int:
+        return self.dst_bounds.shape[1] - 1
+
+
+def shard_edge_layout(src, dst, n: int, n_shards: int) -> ShardedEdgeLayout:
+    """Build the row-block-sharded reduction plan — host-side, setup-time.
+
+    ``src``/``dst`` are the (E,) global edge list, ``src`` sorted
+    ascending (the invariant :func:`edge_layout` and ``tsne.SparseP``
+    already maintain).  Runs in numpy on concrete arrays: the per-block
+    edge counts are data-dependent, so the padded width Ep must be known
+    before anything is traced.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    e = src.shape[0]
+    if e and np.any(src[1:] < src[:-1]):
+        raise ValueError("shard_edge_layout needs a src-sorted edge list")
+    rows_per = -(-n // n_shards)
+    n_pad = rows_per * n_shards
+    starts = np.searchsorted(src, np.arange(n_shards) * rows_per)
+    ends = np.append(starts[1:], e)
+    ep = max(1, int(np.max(ends - starts)))
+
+    ids = np.empty((n_shards, ep), np.int64)
+    mask = np.empty((n_shards, ep), bool)
+    src_b = np.empty((n_shards, rows_per + 1), np.int64)
+    dst_b = np.empty((n_shards, n_pad + 1), np.int64)
+    dst_o = np.empty((n_shards, ep), np.int64)
+    for s in range(n_shards):
+        cnt = ends[s] - starts[s]
+        # padded slots repeat the block's last real edge (or edge 0 for an
+        # empty block): their src stays inside the block, keeping the
+        # per-block src-sorted invariant, and shard_payload zeroes them
+        last = max(starts[s], ends[s] - 1) if cnt else 0
+        row = np.minimum(starts[s] + np.arange(ep), last)
+        ids[s] = row
+        mask[s] = np.arange(ep) < cnt
+        local = src[row] - s * rows_per
+        src_b[s] = np.searchsorted(local, np.arange(rows_per + 1))
+        order = np.argsort(dst[row], kind="stable")
+        dst_o[s] = order
+        dst_b[s] = np.searchsorted(dst[row][order], np.arange(n_pad + 1))
+
+    return ShardedEdgeLayout(
+        src=jnp.asarray(src[ids], jnp.int32),
+        dst=jnp.asarray(dst[ids], jnp.int32),
+        edge_ids=jnp.asarray(ids, jnp.int32),
+        edge_mask=jnp.asarray(mask),
+        src_bounds=jnp.asarray(src_b, jnp.int32),
+        dst_order=jnp.asarray(dst_o, jnp.int32),
+        dst_bounds=jnp.asarray(dst_b, jnp.int32),
+        row_offset=jnp.asarray(np.arange(n_shards) * rows_per, jnp.int32))
+
+
+def shard_payload(layout: ShardedEdgeLayout, vals: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Gather a (E, ...) per-edge payload into the sharded layout's
+    (S, Ep, ...) slot order, zeroed on padded slots — padded edges then
+    contribute exactly nothing to any linear reduction."""
+    out = jnp.asarray(vals)[layout.edge_ids]
+    m = layout.edge_mask
+    return jnp.where(m.reshape(m.shape + (1,) * (out.ndim - 2)), out, 0)
 
 
 def dedupe_edges(src: jnp.ndarray, dst: jnp.ndarray, val: jnp.ndarray

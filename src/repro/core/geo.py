@@ -19,10 +19,16 @@ axis — the sketch is non-invertible; raw coordinates never leave a shard.
 This module is also the template for the LM-side activation sketcher
 (``repro.train.callbacks``) which reuses ``sketch_shard`` verbatim on
 hidden-state projections.
+
+The mesh/axis plumbing this stage pioneered (the ``shard_map`` compat
+shim, linear shard indexing, row-block sizing) now lives in
+:mod:`repro.core.mesh`, shared with the mesh-parallel EMBED stage
+(``core.tsne``/``core.umap`` row-block-shard their iteration loops the
+same way; ``SnsConfig.embed_mesh`` wires it through the pipeline) — the
+whole ingest → HH → embed chain can run without leaving ``shard_map``.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -31,24 +37,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import candidates as cand_mod
 from repro.core import heavy_hitters as hh_mod
+from repro.core import mesh as mesh_mod
 from repro.core import quantize, sketch as sketch_mod
 from repro.core import stream as stream_mod
 from repro.core.candidates import Candidates
 from repro.core.heavy_hitters import HeavyHitters
+from repro.core.mesh import shard_map_compat  # noqa: F401 (hoisted; re-export)
 from repro.core.quantize import GridSpec
 from repro.core.sketch import CountSketch
-
-
-def shard_map_compat(*, mesh, in_specs, out_specs):
-    """Decorator: ``jax.shard_map`` with replication checks off, across the
-    API move (new ``jax.shard_map(check_vma=)`` vs the older
-    ``jax.experimental.shard_map.shard_map(check_rep=)``)."""
-    if hasattr(jax, "shard_map"):
-        return functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    return functools.partial(_sm, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
 
 
 class GeoSketchResult(NamedTuple):
@@ -150,10 +146,7 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
     @shard_map_compat(mesh=mesh, in_specs=(P(),),
                       out_specs=(P(), P(), P(), P()))
     def spmd(sk):
-        # linear shard index from the mesh axes
-        idx = jnp.zeros((), jnp.int32)
-        for a in data_axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        idx = mesh_mod.linear_index(mesh, data_axes)
 
         def step(st, b):
             pts, mask = shard_fn(idx, b)

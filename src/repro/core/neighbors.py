@@ -21,40 +21,81 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import mesh as mesh_mod
 from repro.core.coo import dedupe_edges, row_bounds  # noqa: F401 (re-export)
 from repro.core.tsne import pairwise_sq_dists
 
 
-def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None
+def _knn_rows(x_rows: jnp.ndarray, row_ids: jnp.ndarray, x: jnp.ndarray,
+              k: int, block: Optional[int]
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
-
-    With ``block`` set (and < N) the distance matrix is streamed in row
-    chunks of that size — peak memory O(block · N), never (N, N).
-    """
-    n = x.shape[0]
-    if block is None or block >= n:
-        d = pairwise_sq_dists(x)
-        d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
-        neg_top, idx = jax.lax.top_k(-d, k)
-        return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
-
-    pad = (-n) % block
-    xp = jnp.pad(x, [(0, pad), (0, 0)]) if pad else x
-    nb = xp.shape[0] // block
-    row_ids = jnp.arange(xp.shape[0])
+    """kNN of ``x_rows`` (carrying global ``row_ids``) against the full
+    ``x`` — the per-row-block body shared by the single-device and the
+    shard_map paths.  Streams ``block``-row distance chunks so peak memory
+    is O(block · N); self-pairs (row id == column id) are excluded."""
+    m, n = x_rows.shape[0], x.shape[0]
     col_ids = jnp.arange(n)
 
-    def chunk(args):
-        xc, idc = args
+    def rows(xc, idc):
         d = pairwise_sq_dists(xc, x)                       # (B, N)
         d = jnp.where(idc[:, None] == col_ids[None, :], jnp.inf, d)
         neg_top, idx = jax.lax.top_k(-d, k)
         return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
 
+    if block is None or block >= m:
+        return rows(x_rows, row_ids)
+    pad = (-m) % block
+    if pad:
+        x_rows = jnp.pad(x_rows, [(0, pad), (0, 0)])
+        row_ids = jnp.pad(row_ids, [(0, pad)], constant_values=-1)
+    nb = x_rows.shape[0] // block
     idx, dist = jax.lax.map(
-        chunk, (xp.reshape(nb, block, -1), row_ids.reshape(nb, block)))
-    return idx.reshape(-1, k)[:n], dist.reshape(-1, k)[:n]
+        lambda args: rows(*args),
+        (x_rows.reshape(nb, block, -1), row_ids.reshape(nb, block)))
+    return idx.reshape(-1, k)[:m], dist.reshape(-1, k)[:m]
+
+
+def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None,
+              mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
+
+    With ``block`` set (and < N) the distance matrix is streamed in row
+    chunks of that size — peak memory O(block · N), never (N, N).
+
+    With ``mesh`` (a 1-D embed mesh, see ``core.mesh``) the build is
+    row-block sharded under ``shard_map``: each device owns a contiguous
+    padded row range, computes its distance blocks against the replicated
+    ``x`` (embarrassingly parallel), and k-merges locally via ``top_k`` —
+    the per-row results are identical to the single-device path
+    (tests/test_mesh_embed.py).  The only collective is the implicit
+    all-concatenation of the per-block outputs.
+    """
+    n = x.shape[0]
+    if mesh is None:
+        if block is None or block >= n:
+            d = pairwise_sq_dists(x)
+            d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+            neg_top, idx = jax.lax.top_k(-d, k)
+            return idx, jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+        return _knn_rows(x, jnp.arange(n), x, k, block)
+
+    axis = mesh_mod.mesh_axis(mesh)
+    s = mesh_mod.axis_size(mesh, axis)
+    rows_per, n_pad = mesh_mod.row_block(n, s)
+    xp = jnp.pad(x, [(0, n_pad - n), (0, 0)]) if n_pad > n else x
+    # padded rows carry id -1: never equal to a column id, and their junk
+    # kNN rows are sliced off below
+    ids = jnp.where(jnp.arange(n_pad) < n, jnp.arange(n_pad), -1)
+    P = mesh_mod.P
+
+    @mesh_mod.shard_map_compat(mesh=mesh, in_specs=(P(axis), P(axis), P()),
+                               out_specs=(P(axis), P(axis)))
+    def spmd(x_blk, id_blk, x_full):
+        b = None if block is None else min(block, rows_per)
+        return _knn_rows(x_blk, id_blk, x_full, k, b)
+
+    idx, dist = spmd(xp, ids, x)
+    return idx[:n], dist[:n]
 
 
 def reverse_edge_values(knn_idx: jnp.ndarray, vals_nk: jnp.ndarray,

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import candidates as cand_mod
 from repro.core import geo, heavy_hitters as hh_mod, quantize, replicas
+from repro.core import mesh as mesh_mod
 from repro.core import sketch as sketch_mod
 from repro.core import stream as stream_mod
 from repro.core import tsne as tsne_mod
@@ -69,6 +70,12 @@ class SnsConfig:
     embed_grid_interval: float = 0.0
     embed_grid_max: int = 1024
     embed_cic: str = "xla"         # grid splat/gather: "xla" | "pallas"
+    # mesh-parallel embed stage: None = single device; an int builds a 1-D
+    # mesh of that many local devices; a ready jax Mesh passes through.
+    # Row-block-shards the kNN build + the whole optimizer loop of BOTH
+    # embedders under shard_map (sparse tSNE only — see tsne.run_tsne);
+    # collective contract in core.mesh
+    embed_mesh: object = None      # None | int | jax.sharding.Mesh
     seed: int = 0
 
 
@@ -197,7 +204,13 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
                 tsne_cfg: Optional[tsne_mod.TsneConfig] = None,
                 umap_cfg: Optional[umap_mod.UmapConfig] = None,
                 ) -> Tuple[Representatives, jnp.ndarray, np.ndarray, np.ndarray]:
-    """Stages 3-4: replicas + tSNE/UMAP on the live representatives."""
+    """Stages 3-4: replicas + tSNE/UMAP on the live representatives.
+
+    With ``cfg.embed_mesh`` set the embedder runs row-block-sharded under
+    ``shard_map`` (see ``core.mesh``); results stay fp-equivalent to the
+    single-device path, and UMAP's negative-sample draws stay
+    draw-for-draw aligned (tests/test_mesh_embed.py)."""
+    embed_mesh = mesh_mod.resolve_mesh(cfg.embed_mesh)
     key = jax.random.key(cfg.seed + 1)
     krep, kembed = jax.random.split(key)
     reps = replicas.make_representatives(
@@ -216,13 +229,14 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
                                  grid_interval=cfg.embed_grid_interval,
                                  grid_max=cfg.embed_grid_max,
                                  cic=cfg.embed_cic)
-        emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj)
+        emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj,
+                                   mesh=embed_mesh)
     elif cfg.embedder == "umap":
         # embed_block bounds the kNN row-block on the UMAP side too
         # (tests/test_umap_scatter_free.py pins the propagation)
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
         uc = dataclasses.replace(uc, block=cfg.embed_block)
-        emb = umap_mod.run_umap(kembed, x, uc, weights=wj)
+        emb = umap_mod.run_umap(kembed, x, uc, weights=wj, mesh=embed_mesh)
     else:
         raise ValueError(f"unknown embedder {cfg.embedder!r}")
     return reps, emb, w, ids
@@ -234,7 +248,10 @@ def run(cfg: SnsConfig, points, grid: Optional[GridSpec] = None,
     """Full SnS: points → embedding of weighted heavy-hitter representatives.
 
     A chunk iterator / factory instead of an array delegates to
-    :func:`run_streaming` (single-host only)."""
+    :func:`run_streaming` (single-host only).  ``mesh`` shards the
+    *sketch* stage; ``cfg.embed_mesh`` independently shards the *embed*
+    stage (see :func:`embed_stage`) — set both to run the whole pipeline
+    under ``shard_map``, as examples/geo_distributed.py does."""
     if not _is_points_array(points):
         if mesh is not None:
             raise ValueError(
@@ -268,7 +285,10 @@ def run_streaming(cfg: SnsConfig, chunks=None,
     without a global data pass.
 
     ``coverage`` is HH mass over the ingest-state's running count — the
-    stream length is never re-derived from a resident array."""
+    stream length is never re-derived from a resident array.  After
+    ingest, ``cfg.embed_mesh`` applies to the embed stage exactly as in
+    :func:`run` (the two meshes are independent: a geo ingest mesh can
+    hand off to a local embed mesh, or re-use the same devices)."""
     if mesh is not None:
         if shard_fn is None:
             raise ValueError("mesh streaming needs shard_fn + num_batches")
@@ -299,18 +319,53 @@ def run_streaming(cfg: SnsConfig, chunks=None,
 
 def chunks_from_loader(plan, host: int,
                        make_batch: Callable[[int, int], np.ndarray],
-                       batches_per_shard: int = 1) -> Callable:
+                       batches_per_shard: int = 1,
+                       steal: bool = False,
+                       globally_completed=None,
+                       on_shard_done: Optional[Callable[[int], None]] = None
+                       ) -> Callable:
     """Adapt a ``data.loader.ShardPlan`` into the re-iterable chunk factory
     ``run_streaming`` consumes.  Each pass builds a fresh ``ShardedLoader``
     (its ``completed`` set is mutated by iteration, so a loader instance is
-    single-use) and yields the raw batch arrays in plan order."""
+    single-use) and yields the raw batch arrays in plan order.
+
+    ``steal=True`` turns on the plan's straggler mitigation: after this
+    host drains its primary slice, it calls ``ShardedLoader.steal`` with
+    the shards other hosts have already finished (``globally_completed`` —
+    a zero-arg callable re-read at steal time, or a static sequence) and
+    ingests the leftovers in the plan's deterministic steal order.
+    ``on_shard_done(shard)`` fires once per shard AFTER its last batch is
+    yielded — the hook a multi-host driver uses to publish completions to
+    whatever shared board backs ``globally_completed``.  Hosts that share
+    one board process every shard exactly once between them
+    (tests/test_loader.py::test_chunks_from_loader_steals_exactly_once).
+
+    Caveat: with ``grid=None`` the pipeline iterates the factory twice
+    (min/max pass, then ingest) while the board keeps moving — supply the
+    grid up front so only the single ingest pass claims shards.
+    """
     from repro.data.loader import ShardedLoader
 
     def factory():
         loader = ShardedLoader(plan, host, make_batch,
                                batches_per_shard=batches_per_shard)
-        for _, batch in loader:
-            yield batch
+
+        def drain(pairs):
+            prev = None
+            for shard, batch in pairs:
+                if prev is not None and shard != prev \
+                        and on_shard_done is not None:
+                    on_shard_done(prev)
+                prev = shard
+                yield batch
+            if prev is not None and on_shard_done is not None:
+                on_shard_done(prev)
+
+        yield from drain(iter(loader))
+        if steal:
+            done = globally_completed() if callable(globally_completed) \
+                else (globally_completed or ())
+            yield from drain(loader.steal(done))
     return factory
 
 

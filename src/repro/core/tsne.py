@@ -56,6 +56,19 @@ Two further sparse-backend knobs (this PR's follow-ups to the above):
 The per-edge attraction reduction goes through the shared sorted-COO
 core (:mod:`repro.core.coo`) — the same scatter-free machinery the UMAP
 epoch loop uses.
+
+Mesh-parallel sparse backend (``run_tsne(mesh=...)`` — ``None`` | device
+count | 1-D ``Mesh``, plumbing in :mod:`repro.core.mesh`): the whole
+optimizer loop runs inside ``shard_map``, each device owning a
+contiguous row block of the state and the matching contiguous slice of
+the src-sorted COO edges (``coo.ShardedEdgeLayout``, built host-side at
+setup).  Attraction stays a local ``segment_reduce``; repulsion splats
+per-device masses and ``psum``s the tiny (3, G, G) grid; per iteration
+the only collectives are one ``all_gather`` of the block positions plus
+fixed-size psums (grid, Z, KL, centering) — no cross-device scatter
+(jaxpr-pinned in tests/test_mesh_embed.py).  Per-iteration quantities
+match the single-device path to fp tolerance; long trajectories
+decohere, as any summation-order change must under a chaotic optimizer.
 """
 from __future__ import annotations
 
@@ -68,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coo
+from repro.core import mesh as mesh_mod
 
 BACKENDS = ("dense", "tiled", "pallas", "sparse")
 CIC_PATHS = ("xla", "pallas")
@@ -331,15 +345,17 @@ def sparse_p_from_knn(knn_idx: jnp.ndarray, knn_dist: jnp.ndarray,
 def build_sparse_p(x: jnp.ndarray, perplexity: float,
                    k: Optional[int] = None,
                    weights: Optional[jnp.ndarray] = None,
-                   search_iters: int = 50, block: int = 512) -> SparseP:
+                   search_iters: int = 50, block: int = 512,
+                   mesh=None) -> SparseP:
     """kNN graph + kNN calibration + symmetrized COO P — the sparse
-    backend's one-time setup (the only O(N²·D) pass, blocked)."""
+    backend's one-time setup (the only O(N²·D) pass, blocked; with
+    ``mesh`` the kNN build row-block shards under ``shard_map``)."""
     from repro.core import neighbors
     n = x.shape[0]
     if k is None:
         k = max(8, int(round(3.0 * perplexity)))
     k = min(k, n - 1)          # a kNN row can never exceed the other points
-    idx, dist = neighbors.knn_graph(x, k, block=block)
+    idx, dist = neighbors.knn_graph(x, k, block=block, mesh=mesh)
     return sparse_p_from_knn(idx, dist, perplexity, weights=weights,
                              search_iters=search_iters)
 
@@ -371,6 +387,49 @@ def _corner_weights(f: jnp.ndarray) -> jnp.ndarray:
 
 
 _CORNERS = ((0, 0), (0, 1), (1, 0), (1, 1))
+
+
+def _splat_xla(i0: jnp.ndarray, f: jnp.ndarray, vals: jnp.ndarray,
+               grid_size: int) -> jnp.ndarray:
+    """XLA reference cloud-in-cell splat: (C, N) channel masses onto a
+    (C, G, G) grid via four corner scatter-adds."""
+    w = _corner_weights(f)
+    grid = jnp.zeros((vals.shape[0], grid_size, grid_size), jnp.float32)
+    for ci, (dx, dy) in enumerate(_CORNERS):
+        grid = grid.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
+            vals * w[ci][None, :])
+    return grid
+
+
+def _gather_xla(field: jnp.ndarray, i0: jnp.ndarray, f: jnp.ndarray
+                ) -> jnp.ndarray:
+    """XLA reference cloud-in-cell gather: bilinear read of ``field``
+    ((..., G, G)) at every point — returns (..., N)."""
+    w = _corner_weights(f)
+    acc = 0.0
+    for ci, (dx, dy) in enumerate(_CORNERS):
+        acc += field[..., i0[:, 0] + dx, i0[:, 1] + dy] * w[ci]
+    return acc
+
+
+def _grid_convolve(grid: jnp.ndarray, g: int, h: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convolve the splatted (3, G, G) masses with the two radial tSNE
+    kernels on a circulant-embedded 2G×2G domain (linear convolution).
+    Returns (conv1 (3, G, G) — φ₁ * (m, m·y), conv0 (G, G) — φ₀ * m)."""
+    idx = jnp.arange(2 * g)
+    off = jnp.where(idx <= g, idx, idx - 2 * g).astype(jnp.float32) * h
+    r2 = off[:, None] ** 2 + off[None, :] ** 2
+    k0 = 1.0 / (1.0 + r2)                                    # (1+r²)⁻¹ → Z
+    k1 = k0 * k0                                             # (1+r²)⁻² → force
+
+    pad = jnp.zeros((3, 2 * g, 2 * g), jnp.float32).at[:, :g, :g].set(grid)
+    mf = jnp.fft.rfft2(pad)
+    conv1 = jnp.fft.irfft2(mf * jnp.fft.rfft2(k1)[None],
+                           s=(2 * g, 2 * g))[:, :g, :g]      # φ₁ * (m, my)
+    conv0 = jnp.fft.irfft2(mf[0] * jnp.fft.rfft2(k0),
+                           s=(2 * g, 2 * g))[:g, :g]         # φ₀ * m
+    return conv1, conv0
 
 
 def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
@@ -406,26 +465,10 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
                             y[:, 0], y[:, 1]], axis=1)       # (N, 3)
         grid = ops.cic_splat(i0, f, masses, g, interpret=interpret)
     else:
-        w = _corner_weights(f)
         vals = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]])
-        grid = jnp.zeros((3, g, g), jnp.float32)
-        for ci, (dx, dy) in enumerate(_CORNERS):
-            grid = grid.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
-                vals * w[ci][None, :])
+        grid = _splat_xla(i0, f, vals, g)
 
-    # radial kernels sampled at grid offsets, circulant-embedded in 2G
-    idx = jnp.arange(2 * g)
-    off = jnp.where(idx <= g, idx, idx - 2 * g).astype(jnp.float32) * h
-    r2 = off[:, None] ** 2 + off[None, :] ** 2
-    k0 = 1.0 / (1.0 + r2)                                    # (1+r²)⁻¹ → Z
-    k1 = k0 * k0                                             # (1+r²)⁻² → force
-
-    pad = jnp.zeros((3, 2 * g, 2 * g), jnp.float32).at[:, :g, :g].set(grid)
-    mf = jnp.fft.rfft2(pad)
-    conv1 = jnp.fft.irfft2(mf * jnp.fft.rfft2(k1)[None],
-                           s=(2 * g, 2 * g))[:, :g, :g]      # φ₁ * (m, my)
-    conv0 = jnp.fft.irfft2(mf[0] * jnp.fft.rfft2(k0),
-                           s=(2 * g, 2 * g))[:g, :g]         # φ₀ * m
+    conv1, conv0 = _grid_convolve(grid, g, h)
 
     if cic == "pallas":
         from repro.kernels import ops
@@ -435,17 +478,10 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
         z = jnp.maximum(jnp.sum(phi0) - n, 1e-12)
         return s1[:, None] * y - sy, z
 
-    w = _corner_weights(f)
-
-    def gather(field):
-        acc = 0.0
-        for ci, (dx, dy) in enumerate(_CORNERS):
-            acc += field[..., i0[:, 0] + dx, i0[:, 1] + dy] * w[ci]
-        return acc
-
-    s1 = gather(conv1[0])                                    # Σ_j φ₁
-    sy = gather(conv1[1:])                                   # (2, N) Σ_j φ₁·y_j
-    z = jnp.maximum(jnp.sum(gather(conv0)) - n, 1e-12)       # drop self terms
+    s1 = _gather_xla(conv1[0], i0, f)                        # Σ_j φ₁
+    sy = _gather_xla(conv1[1:], i0, f)                       # (2, N) Σ_j φ₁·y_j
+    z = jnp.maximum(jnp.sum(_gather_xla(conv0, i0, f)) - n,
+                    1e-12)                                   # drop self terms
     rep = s1[:, None] * y - sy.T
     return rep, z
 
@@ -480,6 +516,235 @@ def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
     b = jnp.sum(pe * jnp.log(jnp.maximum(num, 1e-37)))
     kl = a - b + exaggeration * jnp.log(z)
     return grad, kl
+
+
+# ------------------------------------------------------------- mesh sharding
+# Row-block-sharded sparse backend: the whole iteration runs inside
+# shard_map on a 1-D embed mesh (core.mesh).  Device s owns the contiguous
+# row block [s·rows_per, (s+1)·rows_per) of the optimizer state AND the
+# matching contiguous slice of the src-sorted COO edge list
+# (coo.ShardedEdgeLayout), so the attraction reduction is the same local
+# cumsum-difference segment_reduce the single-device path runs — P_ij only
+# ever deposits into src rows (the symmetrized COO carries both
+# directions), so tSNE needs NO dst-side exchange at all.  The repulsion
+# grid is a sum of per-point splats: each device splats its own rows and
+# ONE psum of the (3, G, G) grid masses replicates the total; the FFT then
+# runs replicated on the tiny G×G grid and each device gathers its own
+# rows back.  Collective contract per iteration (jaxpr-pinned in
+# tests/test_mesh_embed.py): one all_gather (the row-block positions) +
+# psums of fixed-size partials (grid, Z, KL terms, the centering mean) —
+# no cross-device scatter anywhere, and the only scatter primitives of any
+# kind are the same four per-device CIC corner splats the single-device
+# backend runs.
+
+class ShardedSparseP(NamedTuple):
+    """``SparseP`` re-laid-out for a 1-D embed mesh: per-block contiguous
+    edge slices (``coo.ShardedEdgeLayout``) + the matching (S, Ep) values
+    (zeroed on padded slots).  Built host-side once at setup."""
+    layout: coo.ShardedEdgeLayout
+    val: jnp.ndarray         # (S, Ep) float32, padded slots carry 0
+
+
+def shard_sparse_p(sp: SparseP, n: int, n_shards: int) -> ShardedSparseP:
+    """Split a (src-sorted) ``SparseP`` into per-row-block edge slices —
+    host-side, setup-time (per-block counts are data-dependent)."""
+    layout = coo.shard_edge_layout(np.asarray(sp.src), np.asarray(sp.dst),
+                                   n, n_shards)
+    return ShardedSparseP(layout=layout,
+                          val=coo.shard_payload(layout, sp.val))
+
+
+def _fft_repulsion_shard(y_blk: jnp.ndarray, live_blk: jnp.ndarray,
+                         y_full: jnp.ndarray, live_full: jnp.ndarray,
+                         grid_size: int, axis: str, n: int, *,
+                         cic: str = "xla", interpret: Optional[bool] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-device body of :func:`fft_repulsion` on a row-block mesh.
+
+    Grid geometry comes from the replicated ``y_full`` (live rows only, so
+    padded tail rows never stretch the bounding box); each device splats
+    its own block's masses, the grids ``psum``-merge, the FFT convolution
+    runs replicated, and the local rows gather back.  Returns
+    (rep (rows_per, 2), z) — ``z`` is replicated."""
+    g = grid_size
+    y_blk = y_blk.astype(jnp.float32)
+    lo = jnp.min(jnp.where(live_full[:, None], y_full, jnp.inf), axis=0)
+    hi = jnp.max(jnp.where(live_full[:, None], y_full, -jnp.inf), axis=0)
+    span = jnp.maximum(jnp.max(hi - lo), 1e-9)
+    h = span / (g - 3)
+    u = (y_blk - lo[None, :]) / h + 1.0
+    i0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 2)
+    f = u - i0
+    mass = live_blk.astype(jnp.float32)
+
+    if cic == "pallas":
+        from repro.kernels import ops
+        masses = jnp.stack([mass, y_blk[:, 0] * mass,
+                            y_blk[:, 1] * mass], axis=1)     # (B, 3)
+        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret)
+    else:
+        vals = jnp.stack([mass, y_blk[:, 0] * mass, y_blk[:, 1] * mass])
+        grid = _splat_xla(i0, f, vals, g)
+    grid = jax.lax.psum(grid, axis)                          # THE exchange
+
+    conv1, conv0 = _grid_convolve(grid, g, h)
+
+    if cic == "pallas":
+        from repro.kernels import ops
+        fields = jnp.concatenate([conv1, conv0[None]], axis=0)
+        got = ops.cic_gather(fields, i0, f, interpret=interpret)
+        s1, sy, phi0 = got[:, 0], got[:, 1:3].T, got[:, 3]
+    else:
+        s1 = _gather_xla(conv1[0], i0, f)
+        sy = _gather_xla(conv1[1:], i0, f)                   # (2, B)
+        phi0 = _gather_xla(conv0, i0, f)
+    z = jnp.maximum(jax.lax.psum(jnp.sum(phi0 * mass), axis) - n, 1e-12)
+    rep = s1[:, None] * y_blk - sy.T
+    return rep, z
+
+
+def sparse_grad_shard(y_blk: jnp.ndarray, layout: coo.ShardedEdgeLayout,
+                      val: jnp.ndarray, y_full: jnp.ndarray,
+                      exaggeration, grid_size: int, axis: str, n: int, *,
+                      cic: str = "xla", interpret: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-device sparse gradient: the shard_map body mirroring
+    :func:`sparse_grad`.  ``layout``/``val`` are ONE device's squeezed
+    (Ep,)-slices; returns (grad (rows_per, 2), KL) with KL replicated."""
+    exaggeration = jnp.asarray(exaggeration, jnp.float32)
+    rows_per = layout.src_bounds.shape[0] - 1
+    n_pad = layout.dst_bounds.shape[0] - 1
+    ys, yd = y_full[layout.src], y_full[layout.dst]
+    diff = ys - yd
+    num = 1.0 / (1.0 + jnp.sum(diff * diff, axis=1))         # (Ep,)
+    pe = exaggeration * val                                  # 0 on padding
+    # local rows own their full edge slice (blocks split at row
+    # boundaries), so the attraction reduction is entirely local
+    att = coo.segment_reduce((pe * num)[:, None] * diff, layout.src_bounds)
+    live_blk = layout.row_offset + jnp.arange(rows_per) < n
+    live_full = jnp.arange(n_pad) < n
+    rep, z = _fft_repulsion_shard(y_blk, live_blk, y_full, live_full,
+                                  grid_size, axis, n, cic=cic,
+                                  interpret=interpret)
+    grad = 4.0 * (att - rep / z)
+    grad = jnp.where(live_blk[:, None], grad, 0.0)
+    a = jax.lax.psum(jnp.sum(jnp.where(
+        pe > 0, pe * jnp.log(jnp.maximum(pe, 1e-37)), 0.0)), axis)
+    b = jax.lax.psum(jnp.sum(pe * jnp.log(jnp.maximum(num, 1e-37))), axis)
+    kl = a - b + exaggeration * jnp.log(z)
+    return grad, kl
+
+
+def _momentum_update_shard(state: TsneState, grad: jnp.ndarray, mom,
+                           cfg: TsneConfig, axis: str, live_blk: jnp.ndarray,
+                           n: int) -> TsneState:
+    """Row-block momentum update: identical math to
+    :func:`_momentum_update` except the recentering mean is a ``psum`` of
+    per-block partial sums over the live rows."""
+    same_sign = jnp.sign(grad) == jnp.sign(state.velocity)
+    gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
+    gains = jnp.maximum(gains, cfg.min_gain)
+    vel = mom * state.velocity - cfg.learning_rate * gains * grad
+    y = state.y + vel
+    total = jax.lax.psum(
+        jnp.sum(jnp.where(live_blk[:, None], y, 0.0), axis=0), axis)
+    y = y - (total / n)[None, :]
+    return TsneState(y, vel, gains)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "count", "grid_size",
+                                             "interpret", "mesh", "n"))
+def _sparse_stage_mesh(state: TsneState, kls: jnp.ndarray,
+                       ssp: ShardedSparseP, it0: jnp.ndarray, *,
+                       cfg: TsneConfig, count: int, grid_size: int,
+                       interpret: bool, mesh, n: int
+                       ) -> Tuple[TsneState, jnp.ndarray]:
+    """``count`` mesh-parallel optimizer iterations at a fixed grid size —
+    the sharded twin of :func:`_sparse_stage`.  State rows and edge slices
+    stay on their devices across the whole ``fori_loop``; per iteration the
+    only collectives are one all_gather of the block positions and the
+    fixed-size psums (grid, Z, KL, centering)."""
+    axis = mesh_mod.mesh_axis(mesh)
+    P = mesh_mod.P
+    lay_specs = jax.tree_util.tree_map(lambda _: P(axis), ssp)
+    state_specs = TsneState(P(axis), P(axis), P(axis))
+
+    @mesh_mod.shard_map_compat(
+        mesh=mesh, in_specs=(state_specs, P(), lay_specs, P()),
+        out_specs=(state_specs, P()))
+    def spmd(state, kls, ssp, it0):
+        # (S, ...) leaves arrive as (1, ...) per device — drop the axis
+        lay = jax.tree_util.tree_map(lambda a: a[0], ssp.layout)
+        val = ssp.val[0]
+        rows_per = lay.src_bounds.shape[0] - 1
+        live_blk = lay.row_offset + jnp.arange(rows_per) < n
+
+        def step(i, carry):
+            st, kls = carry
+            it = it0 + i
+            exag, mom = _phase(it, cfg)
+            y_full = jax.lax.all_gather(st.y, axis, axis=0, tiled=True)
+            grad, kl = sparse_grad_shard(
+                st.y, lay, val, y_full, exag, grid_size, axis, n,
+                cic=cfg.cic, interpret=interpret)
+            st = _momentum_update_shard(st, grad, mom, cfg, axis,
+                                        live_blk, n)
+            return st, kls.at[it].set(kl)
+
+        return jax.lax.fori_loop(0, count, step, (state, kls))
+
+    return spmd(state, kls, ssp, it0)
+
+
+def _run_tsne_sparse_mesh(key: jax.Array, x: jnp.ndarray, weights, *,
+                          cfg: TsneConfig, mesh, interpret: bool
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mesh-parallel sparse optimizer (fixed or span-adaptive G).
+
+    Setup: sharded kNN build + COO P (jitted), then the host slices the
+    src-sorted edge list into per-row-block shards (shapes are
+    data-dependent, so this is a one-time concrete pass).  The optimizer
+    then runs in jitted mesh stages; with ``grid_interval > 0`` the host
+    checks the span between stages and doubles G exactly like the
+    single-device staged driver."""
+    n = x.shape[0]
+    n_shards = mesh_mod.axis_size(mesh, mesh_mod.mesh_axis(mesh))
+    rows_per, n_pad = mesh_mod.row_block(n, n_shards)
+
+    sp = _sparse_setup_p_mesh(x, weights, cfg=cfg, mesh=mesh)
+    ssp = shard_sparse_p(sp, n, n_shards)
+
+    # identical draws to the single-device path, then padded tail rows
+    y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
+    y0 = jnp.pad(y0, [(0, n_pad - n), (0, 0)])
+    state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
+                      gains=jnp.ones_like(y0))
+    kls = jnp.zeros((cfg.n_iter,))
+    g = cfg.grid_size
+    it = 0
+    while it < cfg.n_iter:
+        count = cfg.n_iter - it if cfg.grid_interval <= 0 else \
+            min(cfg.adaptive_interval, cfg.n_iter - it)
+        state, kls = _sparse_stage_mesh(
+            state, kls, ssp, jnp.asarray(it, jnp.int32), cfg=cfg,
+            count=count, grid_size=g, interpret=interpret, mesh=mesh, n=n)
+        it += count
+        if cfg.grid_interval > 0 and it < cfg.n_iter:
+            y_live = state.y[:n]
+            span = float(jnp.max(jnp.max(y_live, axis=0)
+                                 - jnp.min(y_live, axis=0)))
+            g = _grid_for_span(span, g, cfg)
+    return state.y[:n], kls
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
+def _sparse_setup_p_mesh(x: jnp.ndarray, weights, *, cfg: TsneConfig,
+                         mesh) -> SparseP:
+    """Jitted sparse-P setup with the kNN build sharded over the mesh."""
+    return build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
+                          weights=weights,
+                          search_iters=cfg.sigma_search_iters,
+                          block=cfg.block, mesh=mesh)
 
 
 def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -744,12 +1009,15 @@ def _run_tsne_sparse_adaptive(key: jax.Array, x: jnp.ndarray, weights, *,
 
 def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
              weights: Optional[jnp.ndarray] = None,
-             backend: Optional[str] = None
-             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             backend: Optional[str] = None,
+             mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full tSNE: returns (embedding (N, dims), KL trace (n_iter,)).
 
     ``backend`` overrides ``cfg.backend``; Pallas interpret mode is
-    auto-selected off-TPU.
+    auto-selected off-TPU.  ``mesh`` (``None`` | device count | 1-D
+    ``Mesh``, see ``core.mesh``) runs the whole sparse optimizer
+    row-block-sharded under ``shard_map`` — sparse backend only (the
+    dense/tiled/pallas backends are O(N²) and stay single-device).
     """
     backend = backend or cfg.backend
     if backend not in BACKENDS:
@@ -760,6 +1028,13 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
     if cfg.cic not in CIC_PATHS:
         raise ValueError(f"unknown cic {cfg.cic!r}; want one of {CIC_PATHS}")
     interpret = jax.default_backend() != "tpu"
+    mesh = mesh_mod.resolve_mesh(mesh)
+    if mesh is not None:
+        if backend != "sparse":
+            raise ValueError(
+                f"mesh-parallel tSNE needs backend='sparse'; got {backend!r}")
+        return _run_tsne_sparse_mesh(key, x, weights, cfg=cfg, mesh=mesh,
+                                     interpret=interpret)
     if backend == "sparse" and cfg.grid_interval > 0:
         return _run_tsne_sparse_adaptive(key, x, weights, cfg=cfg,
                                          interpret=interpret)

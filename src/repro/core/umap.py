@@ -37,6 +37,17 @@ tests/test_umap_scatter_free.py).
 Weighted extension (SnS): HH counts enter as per-point mass, scaling each
 point's outgoing memberships — representatives of dense cells attract
 proportionally more, mirroring the paper's replica weighting.
+
+Mesh-parallel path (``run_umap(mesh=...)`` — ``None`` | device count |
+1-D ``Mesh``, plumbing in :mod:`repro.core.mesh`): the SGD loop runs
+inside ``shard_map`` with each device owning a contiguous row block of y
+and the matching contiguous slice of the src-sorted edge list
+(``coo.ShardedEdgeLayout``).  Per epoch: one ``all_gather`` of the block
+positions, local src-side reduction, and ONE ``psum`` of the full-length
+dst-side partials — zero scatter primitives of any kind (jaxpr-pinned in
+tests/test_mesh_embed.py).  Negative samples are drawn as the full (E, R)
+array from the replicated key and gathered per block, so the mesh run is
+draw-for-draw aligned with the single-device stream.
 """
 from __future__ import annotations
 
@@ -48,7 +59,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coo, neighbors
+from repro.core import coo
+from repro.core import mesh as mesh_mod
+from repro.core import neighbors
 from repro.core.neighbors import knn_graph  # noqa: F401  (public re-export)
 
 
@@ -190,15 +203,11 @@ def epoch_delta(y: jnp.ndarray, layout: coo.EdgeLayout, memb_n: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
-def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
-                       memb: jnp.ndarray, n: int, cfg: UmapConfig,
-                       init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Epoch-batched SGD on the UMAP cross-entropy, scatter-free.
-
-    Setup builds the bidirectional sorted-COO reduction plan once
-    (:func:`repro.core.coo.edge_layout`); every epoch then runs
-    :func:`epoch_delta` inside one jitted ``fori_loop`` with zero scatter
-    primitives (jaxpr-pinned in tests/test_umap_scatter_free.py)."""
+def _optimize_embedding_jit(key: jax.Array, edges: jnp.ndarray,
+                            memb: jnp.ndarray, n: int, cfg: UmapConfig,
+                            init: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
+    """Single-device SGD loop (the reference path, fully jitted)."""
     a, b = fit_ab(cfg.spread, cfg.min_dist)
     kinit, kloop = jax.random.split(key)
     y0 = init if init is not None else \
@@ -218,13 +227,142 @@ def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
     return state.y
 
 
+def epoch_delta_shard(y_blk: jnp.ndarray, y_full: jnp.ndarray,
+                      lay: coo.ShardedEdgeLayout, memb_n: jnp.ndarray,
+                      kneg: jax.Array, a: float, b: float, neg_rate: int,
+                      n: int, e_total: int, axis: str) -> jnp.ndarray:
+    """One epoch's per-point delta for ONE device's row block — the
+    shard_map body mirroring :func:`epoch_delta`.
+
+    ``lay``/``memb_n`` are the device's squeezed (Ep,)-slices of the
+    row-block layout (``coo.ShardedEdgeLayout``); ``y_full`` the
+    all_gathered positions.  Negative samples are drawn as the FULL
+    (E, neg_rate) array from the replicated ``kneg`` and gathered by
+    ``lay.edge_ids`` — every edge sees bit-identical draws to the
+    single-device stream, which is what makes the mesh run draw-for-draw
+    reproducible (tests/test_mesh_embed.py).  The src-side reduction is
+    local (blocks split at row boundaries); the dst-side attraction
+    reaction reduces into a full-length per-block partial and crosses
+    devices as ONE ``psum`` — no scatter anywhere.
+    """
+    src, dst = lay.src, lay.dst                          # global ids (Ep,)
+    ys, yd = y_full[src], y_full[dst]
+    d2 = jnp.sum((ys - yd) ** 2, axis=1)
+    grad_coef = (-2.0 * a * b * d2 ** (b - 1.0)
+                 / (1.0 + a * d2 ** b))
+    grad_coef = jnp.where(d2 > 0, grad_coef, 0.0)
+    att = jnp.clip(grad_coef[:, None] * (ys - yd), -4.0, 4.0) \
+        * memb_n[:, None]                                # 0 on padded slots
+    neg = jax.random.randint(kneg, (e_total, neg_rate), 0, n)[lay.edge_ids]
+    valid = (neg != src[:, None]) & (neg != dst[:, None])
+    yn = y_full[neg]                                     # (Ep, R, dims)
+    dn2 = jnp.sum((ys[:, None, :] - yn) ** 2, axis=2)
+    rep_coef = (2.0 * b) / ((0.001 + dn2) * (1.0 + a * dn2 ** b))
+    rep = jnp.clip(rep_coef[..., None] * (ys[:, None, :] - yn),
+                   -4.0, 4.0) * memb_n[:, None, None]
+    rep = jnp.where(valid[..., None], rep, 0.0)
+    src_red = coo.segment_reduce(att + jnp.sum(rep, axis=1),
+                                 lay.src_bounds)         # (rows_per, dims)
+    dst_part = coo.segment_reduce(att[lay.dst_order],
+                                  lay.dst_bounds)        # (n_pad, dims)
+    dst_tot = jax.lax.psum(dst_part, axis)               # THE dst exchange
+    rows_per = lay.src_bounds.shape[0] - 1
+    dst_blk = jax.lax.dynamic_slice_in_dim(dst_tot, lay.row_offset,
+                                           rows_per, axis=0)
+    return src_red - dst_blk
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "e_total", "mesh"))
+def _optimize_embedding_mesh(key: jax.Array, slay: coo.ShardedEdgeLayout,
+                             memb_s: jnp.ndarray,
+                             init: Optional[jnp.ndarray], *, cfg: UmapConfig,
+                             n: int, e_total: int, mesh) -> jnp.ndarray:
+    """Mesh-parallel SGD loop: row blocks of y and contiguous edge slices
+    stay on their devices across all epochs; per epoch one all_gather of
+    the block positions + one psum of the dst-side partials."""
+    a, b = fit_ab(cfg.spread, cfg.min_dist)
+    axis = mesh_mod.mesh_axis(mesh)
+    n_pad = slay.n_padded
+    kinit, kloop = jax.random.split(key)
+    if init is None:
+        # identical draws to the single-device path, then padded tail rows
+        y0 = cfg.init_scale * jax.random.uniform(kinit, (n, cfg.dims)) - \
+            cfg.init_scale / 2.0
+    else:
+        y0 = init
+    y0 = jnp.pad(y0, [(0, n_pad - n), (0, 0)])
+    P = mesh_mod.P
+    lay_specs = jax.tree_util.tree_map(lambda _: P(axis), slay)
+
+    @mesh_mod.shard_map_compat(
+        mesh=mesh, in_specs=(P(), lay_specs, P(axis), P(axis)),
+        out_specs=P(axis))
+    def spmd(key, slay, memb_s, y_blk):
+        # (S, ...) leaves arrive as (1, ...) per device — drop the axis
+        lay = jax.tree_util.tree_map(lambda x: x[0], slay)
+        memb_loc = memb_s[0]
+
+        def epoch(i, state):
+            y_blk, key = state
+            key, kneg = jax.random.split(key)
+            alpha = cfg.learning_rate * (1.0 - i / cfg.n_epochs)
+            y_full = jax.lax.all_gather(y_blk, axis, axis=0, tiled=True)
+            delta = epoch_delta_shard(y_blk, y_full, lay, memb_loc, kneg,
+                                      a, b, cfg.neg_rate, n, e_total, axis)
+            return _OptState(y_blk + alpha * delta, key)
+
+        state = jax.lax.fori_loop(0, cfg.n_epochs, epoch,
+                                  _OptState(y_blk, key))
+        return state.y
+
+    return spmd(kloop, slay, memb_s, y0)[:n]
+
+
+def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
+                       memb: jnp.ndarray, n: int, cfg: UmapConfig,
+                       init: Optional[jnp.ndarray] = None,
+                       mesh=None) -> jnp.ndarray:
+    """Epoch-batched SGD on the UMAP cross-entropy, scatter-free.
+
+    Setup builds the bidirectional sorted-COO reduction plan once
+    (:func:`repro.core.coo.edge_layout`); every epoch then runs
+    :func:`epoch_delta` inside one jitted ``fori_loop`` with zero scatter
+    primitives (jaxpr-pinned in tests/test_umap_scatter_free.py).
+
+    With ``mesh`` (``None`` | device count | 1-D ``Mesh``, see
+    ``core.mesh``) the loop runs row-block-sharded under ``shard_map``:
+    the host slices the src-sorted edge list into per-block contiguous
+    shards once (``coo.shard_edge_layout`` — concrete arrays, so this
+    path needs ``edges``/``memb`` outside any trace), then every epoch is
+    the same math with one all_gather + one psum; negative-sample draws
+    stay bit-identical to the single-device stream.
+    """
+    mesh = mesh_mod.resolve_mesh(mesh)
+    if mesh is None:
+        return _optimize_embedding_jit(key, edges, memb, n, cfg, init)
+    n_shards = mesh_mod.axis_size(mesh, mesh_mod.mesh_axis(mesh))
+    # same stable layout order as the reference path, then host-side shard
+    layout, order = coo.edge_layout(edges[:, 0], edges[:, 1], n)
+    memb_n = (memb / jnp.maximum(jnp.max(memb), 1e-12))[order]
+    slay = coo.shard_edge_layout(np.asarray(layout.src),
+                                 np.asarray(layout.dst), n, n_shards)
+    memb_s = coo.shard_payload(slay, memb_n)
+    return _optimize_embedding_mesh(key, slay, memb_s, init, cfg=cfg, n=n,
+                                    e_total=int(layout.src.shape[0]),
+                                    mesh=mesh)
+
+
 def run_umap(key: jax.Array, x: jnp.ndarray, cfg: UmapConfig,
-             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+             weights: Optional[jnp.ndarray] = None,
+             mesh=None) -> jnp.ndarray:
     """Full UMAP: kNN → fuzzy set → SGD embed.  Returns (N, dims).
 
     Every stage is memory-bounded: kNN streams ``cfg.block`` rows at a
-    time, and symmetrization is sparse — no (N, N) buffer at any N."""
-    idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block)
+    time, and symmetrization is sparse — no (N, N) buffer at any N.
+    ``mesh`` row-block-shards both the kNN build and the SGD loop under
+    ``shard_map`` (see :func:`optimize_embedding`)."""
+    mesh = mesh_mod.resolve_mesh(mesh)
+    idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block, mesh=mesh)
     edges, memb = fuzzy_simplicial_set(idx, dist, weights=weights,
                                        search_iters=cfg.sigma_search_iters)
-    return optimize_embedding(key, edges, memb, x.shape[0], cfg)
+    return optimize_embedding(key, edges, memb, x.shape[0], cfg, mesh=mesh)

@@ -158,7 +158,7 @@ def test_embed_stage_wires_embed_block_into_umap_cfg(monkeypatch):
     kNN row-block — the knob that keeps the graph build O(block·N))."""
     seen = {}
 
-    def fake_run_umap(key, x, cfg, weights=None):
+    def fake_run_umap(key, x, cfg, weights=None, mesh=None):
         seen["cfg"] = cfg
         return jnp.zeros((x.shape[0], cfg.dims))
 
@@ -176,7 +176,7 @@ def test_embed_stage_wires_adaptive_grid_into_tsne_cfg(monkeypatch):
     """The new adaptive-grid / CIC knobs must reach TsneConfig too."""
     seen = {}
 
-    def fake_run_tsne(key, x, cfg, weights=None, backend=None):
+    def fake_run_tsne(key, x, cfg, weights=None, backend=None, mesh=None):
         seen["cfg"] = cfg
         return jnp.zeros((x.shape[0], cfg.dims)), jnp.zeros((cfg.n_iter,))
 
