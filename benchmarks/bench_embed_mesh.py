@@ -156,10 +156,8 @@ def run(devices: Sequence[int] = (1, 2, 4, 8), n: int = 20_000,
         "umap_speedup_at_max_d":
             records[-1]["umap_epochs_per_sec"] / base["umap_epochs_per_sec"],
         "records": records}
-    out = json.dumps(summary, indent=2)
-    if json_out:
-        with open(json_out, "w") as f:
-            f.write(out + "\n")
+    from benchmarks.common import emit_json
+    emit_json(summary, json_out)
     return csv.dump("embed_mesh — sharded embed stage, device-count scaling "
                     "(virtual CPU devices share cores; see module docstring)")
 

@@ -31,7 +31,7 @@ import numpy as np
 
 # peak_buffer_bytes / iter_jaxpr_avals moved to benchmarks.common (shared
 # with bench_ingest_scaling); re-exported here for callers of this module.
-from benchmarks.common import (iter_jaxpr_avals,  # noqa: F401
+from benchmarks.common import (emit_json, iter_jaxpr_avals,  # noqa: F401
                                peak_buffer_bytes, repo_root_json, time_fn)
 from benchmarks.bench_embed_throughput import (synthetic_sparse_p,
                                                synthetic_stats)
@@ -91,11 +91,8 @@ def run(sizes: Sequence[int] = (8192, 16384, 32768, 65536),
               f"peak={rec['peak_buffer_bytes'] / 1e6:10.1f} MB "
               f"t={rec['iter_time_s']:.3f}", flush=True)
 
-    out = json.dumps({"bench": "embed_scaling", "records": records}, indent=2)
-    if json_out:
-        with open(json_out, "w") as f:
-            f.write(out + "\n")
-    return out
+    return emit_json({"bench": "embed_scaling", "records": records},
+                     json_out)
 
 
 def main() -> None:

@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import interleaved_medians, repo_root_json
+from benchmarks.common import (emit_json, interleaved_medians,
+                               repo_root_json)
 from repro.core import coo, neighbors, tsne, umap
 from repro.core.tsne import PointStats, SparseP
 
@@ -206,18 +207,14 @@ def run(sizes: Sequence[int] = (16384, 65536, 262144), block: int = 512,
               flush=True)
 
     common = [r for r in records if r.get("speedup_sparse_vs_tiled")]
-    out = json.dumps({
+    return emit_json({
         "bench": "embed_throughput",
         "speedup_sparse_vs_tiled_at_max_common_n":
             common[-1]["speedup_sparse_vs_tiled"] if common else None,
         "speedup_umap_scatterfree_vs_scatter_at_max_n":
             records[-1]["speedup_umap_scatterfree_vs_scatter"]
             if records else None,
-        "records": records}, indent=2)
-    if json_out:
-        with open(json_out, "w") as f:
-            f.write(out + "\n")
-    return out
+        "records": records}, json_out)
 
 
 def main() -> None:

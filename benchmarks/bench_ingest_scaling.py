@@ -132,13 +132,10 @@ def run(sizes: Sequence[int] = (8192, 65536, 262144, 1048576),
     for r in records:
         by_chunk.setdefault(r["chunk"], set()).add(r["stream_peak_bytes"])
     flat = all(len(peaks) == 1 for peaks in by_chunk.values())
-    out = json.dumps({"bench": "ingest_scaling",
+    from benchmarks.common import emit_json
+    return emit_json({"bench": "ingest_scaling",
                       "stream_peak_flat": flat,
-                      "records": records}, indent=2)
-    if json_out:
-        with open(json_out, "w") as f:
-            f.write(out + "\n")
-    return out
+                      "records": records}, json_out)
 
 
 def main() -> None:

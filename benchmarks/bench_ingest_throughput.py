@@ -43,7 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import interleaved_medians, repo_root_json
+from benchmarks.common import (emit_json, interleaved_medians,
+                               repo_root_json)
 from repro.core import quantize, sketch as sketch_mod, stream
 from repro.core.candidates import Candidates
 from repro.data.synthetic import MixtureSpec, gaussian_mixture
@@ -205,14 +206,10 @@ def run(sizes: Sequence[int] = (65536, 262144, 1048576),
               f"Mpts/s  speedup={rec['speedup_fused_superbatch']:.2f}x",
               flush=True)
 
-    out = json.dumps({"bench": "ingest_throughput",
+    return emit_json({"bench": "ingest_throughput",
                       "speedup_at_max_n":
                           records[-1]["speedup_fused_superbatch"],
-                      "records": records}, indent=2)
-    if json_out:
-        with open(json_out, "w") as f:
-            f.write(out + "\n")
-    return out
+                      "records": records}, json_out)
 
 
 def main() -> None:

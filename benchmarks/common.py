@@ -1,11 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission, static jaxpr
-peak-buffer measurement (used by the scaling benches to report memory
-trajectories past the point where allocation would OOM)."""
+"""Shared benchmark utilities: timing, CSV emission, JSON baselines with
+a backend stamp, static jaxpr peak-buffer measurement (used by the
+scaling benches to report memory trajectories past the point where
+allocation would OOM)."""
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -16,6 +18,24 @@ def repo_root_json(name: str) -> str:
     root — the convention for benchmark trajectories kept under git."""
     return os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), name)
+
+
+def emit_json(payload: dict, json_out: Optional[str]) -> str:
+    """Serialize a bench summary and optionally write it to ``json_out``.
+
+    Stamps a ``backend`` column (``jax.default_backend()``) right after
+    the bench name so every ``BENCH_*.json`` records where it ran — the
+    tracked baselines are only comparable within a backend (ROADMAP
+    item 4's CPU-vs-accelerator trajectory).  Returns the JSON string.
+    """
+    stamped = {"bench": payload.get("bench"),
+               "backend": jax.default_backend()}
+    stamped.update({k: v for k, v in payload.items() if k != "bench"})
+    out = json.dumps(stamped, indent=2)
+    if json_out:
+        with open(json_out, "w") as f:
+            f.write(out + "\n")
+    return out
 
 
 def iter_jaxpr_avals(jaxpr):

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
 
 Emits CSV blocks (name, value, paper reference) for:
   * sketch_scaling       — paper Fig. 6 (linear time in stream size)
@@ -17,12 +17,88 @@ Emits CSV blocks (name, value, paper reference) for:
   * ingest_throughput    — points/sec: two-sort vs fused vs fused+superbatch
   * embed_mesh           — sharded embed stage iters/sec vs device count
                            (one subprocess per D, virtual CPU devices)
+  * knn_recall           — approximate (sketch bucketing + NN-descent) vs
+                           exact kNN build: recall + wall-clock
+
+Every bench is registered by module name and imported via importlib at
+dispatch time — a registered module that fails to import aborts the run
+with the import error (no silent skips), and an unknown ``--only`` name
+is an error listing the registry.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
+
+
+def _load(module: str):
+    """Import a registered bench module, failing LOUDLY if it is absent
+    or broken — a bench silently dropping out of the suite is how
+    regressions hide."""
+    try:
+        return importlib.import_module(f"benchmarks.{module}")
+    except ImportError as e:
+        raise RuntimeError(
+            f"registered bench module benchmarks.{module} failed to "
+            f"import: {e}") from e
+
+
+def build_jobs(fast: bool):
+    """The registry: (name, module, runner(mod)) per bench."""
+    n_scale = 200_000 if fast else 2_000_000
+    n_mid = 100_000 if fast else 1_000_000
+    n_small = 60_000 if fast else 300_000
+    return [
+        ("sketch_scaling", "bench_sketch_scaling", lambda m: m.run()),
+        ("error_vs_rank", "bench_error_vs_rank", lambda m: m.run(n_scale)),
+        ("hh_vs_sampling", "bench_hh_vs_sampling", lambda m: m.run(n_mid)),
+        ("hh_coverage", "bench_coverage", lambda m: m.run(n_scale)),
+        ("collision_model", "bench_collision_model", lambda m: m.run()),
+        ("pipeline_quality", "bench_pipeline_quality",
+         lambda m: m.run(n_small)),
+        ("kernel_paths", "bench_kernels", lambda m: m.run()),
+        ("embed_scaling", "bench_embed_scaling", lambda m: m.run(
+            sizes=(4096, 8192) if fast else (8192, 16384, 32768, 65536),
+            dense_max=8192 if fast else 16384,
+            iters=1 if fast else 2,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if fast else m.DEFAULT_JSON)),
+        ("embed_throughput", "bench_embed_throughput", lambda m: m.run(
+            sizes=(4096, 8192) if fast else (16384, 65536, 262144),
+            knn=16 if fast else 90,
+            grid=64 if fast else 128,
+            dense_max=4096 if fast else 16384,
+            tiled_max=8192 if fast else 65536,
+            iters=2 if fast else 3,
+            # k=15 is the UMAP acceptance geometry (paper n_neighbors)
+            umap_knn=15, neg_rate=5,
+            json_out=None if fast else m.DEFAULT_JSON)),
+        ("ingest_scaling", "bench_ingest_scaling", lambda m: m.run(
+            sizes=(8192, 32768) if fast
+            else (8192, 65536, 262144, 1048576),
+            chunk=4096 if fast else 8192,
+            oneshot_time_max=32768 if fast else 262144)),
+        ("embed_mesh", "bench_embed_mesh", lambda m: m.run(
+            devices=(1, 2) if fast else (1, 2, 4, 8),
+            n=4096 if fast else 20_000,
+            knn=16 if fast else 32,
+            grid=64 if fast else 128,
+            tsne_iters=5 if fast else 20,
+            umap_epochs=5 if fast else 20,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if fast else "__default__")),
+        ("ingest_throughput", "bench_ingest_throughput", lambda m: m.run(
+            sizes=(16384, 65536) if fast else (65536, 262144, 1048576),
+            chunk=2048 if fast else 4096,
+            top_k=2048 if fast else 20480,
+            # fast mode must not clobber the tracked full-size baseline
+            json_out=None if fast else m.DEFAULT_JSON)),
+        ("knn_recall", "bench_knn_recall", lambda m: (
+            m.run_smoke(json_out="BENCH_knn_recall_ci.json") if fast
+            else m.run(json_out=m.DEFAULT_JSON))),
+    ]
 
 
 def main() -> None:
@@ -32,71 +108,19 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_sketch_scaling, bench_error_vs_rank,
-                            bench_hh_vs_sampling, bench_coverage,
-                            bench_collision_model, bench_pipeline_quality,
-                            bench_kernels, bench_embed_scaling,
-                            bench_embed_throughput, bench_embed_mesh,
-                            bench_ingest_scaling, bench_ingest_throughput)
-    n_scale = 200_000 if args.fast else 2_000_000
-    n_mid = 100_000 if args.fast else 1_000_000
-    n_small = 60_000 if args.fast else 300_000
-    jobs = [
-        ("sketch_scaling", lambda: bench_sketch_scaling.run()),
-        ("error_vs_rank", lambda: bench_error_vs_rank.run(n_scale)),
-        ("hh_vs_sampling", lambda: bench_hh_vs_sampling.run(n_mid)),
-        ("hh_coverage", lambda: bench_coverage.run(n_scale)),
-        ("collision_model", lambda: bench_collision_model.run()),
-        ("pipeline_quality", lambda: bench_pipeline_quality.run(n_small)),
-        ("kernel_paths", lambda: bench_kernels.run()),
-        ("embed_scaling", lambda: bench_embed_scaling.run(
-            sizes=(4096, 8192) if args.fast
-            else (8192, 16384, 32768, 65536),
-            dense_max=8192 if args.fast else 16384,
-            iters=1 if args.fast else 2,
-            # fast mode must not clobber the tracked full-size baseline
-            json_out=None if args.fast else bench_embed_scaling.DEFAULT_JSON)),
-        ("embed_throughput", lambda: bench_embed_throughput.run(
-            sizes=(4096, 8192) if args.fast
-            else (16384, 65536, 262144),
-            knn=16 if args.fast else 90,
-            grid=64 if args.fast else 128,
-            dense_max=4096 if args.fast else 16384,
-            tiled_max=8192 if args.fast else 65536,
-            iters=2 if args.fast else 3,
-            # k=15 is the UMAP acceptance geometry (paper n_neighbors)
-            umap_knn=15, neg_rate=5,
-            json_out=None if args.fast
-            else bench_embed_throughput.DEFAULT_JSON)),
-        ("ingest_scaling", lambda: bench_ingest_scaling.run(
-            sizes=(8192, 32768) if args.fast
-            else (8192, 65536, 262144, 1048576),
-            chunk=4096 if args.fast else 8192,
-            oneshot_time_max=32768 if args.fast else 262144)),
-        ("embed_mesh", lambda: bench_embed_mesh.run(
-            devices=(1, 2) if args.fast else (1, 2, 4, 8),
-            n=4096 if args.fast else 20_000,
-            knn=16 if args.fast else 32,
-            grid=64 if args.fast else 128,
-            tsne_iters=5 if args.fast else 20,
-            umap_epochs=5 if args.fast else 20,
-            # fast mode must not clobber the tracked full-size baseline
-            json_out=None if args.fast else "__default__")),
-        ("ingest_throughput", lambda: bench_ingest_throughput.run(
-            sizes=(16384, 65536) if args.fast
-            else (65536, 262144, 1048576),
-            chunk=2048 if args.fast else 4096,
-            top_k=2048 if args.fast else 20480,
-            # fast mode must not clobber the tracked full-size baseline
-            json_out=None if args.fast
-            else bench_ingest_throughput.DEFAULT_JSON)),
-    ]
-    for name, fn in jobs:
+    jobs = build_jobs(args.fast)
+    names = [name for name, _, _ in jobs]
+    if args.only is not None and args.only not in names:
+        raise SystemExit(
+            f"--only {args.only!r} matches no registered bench; "
+            f"choose from: {', '.join(names)}")
+    for name, module, runner in jobs:
         if args.only and args.only != name:
             continue
+        mod = _load(module)
         t0 = time.time()
         try:
-            print(fn())
+            print(runner(mod))
             print(f"# [{name} done in {time.time() - t0:.1f}s]\n",
                   flush=True)
         except Exception as e:                               # noqa: BLE001

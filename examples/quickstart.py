@@ -31,6 +31,12 @@ def main():
                     choices=("dense", "tiled", "pallas", "sparse"),
                     help="tSNE gradient backend; 'sparse' (kNN attraction "
                          "+ FFT grid repulsion) is the 10^5+ reps regime")
+    ap.add_argument("--knn-method", default="auto",
+                    choices=("auto", "exact", "ann"),
+                    help="kNN build for the embed stage: 'ann' is the "
+                         "sub-quadratic approximate engine (sketch-native "
+                         "bucketing + NN-descent, recall >= 0.9); 'auto' "
+                         "switches to it past ~65k representatives")
     ap.add_argument("--top-k", type=int, default=512)
     args = ap.parse_args()
 
@@ -43,7 +49,8 @@ def main():
     cfg = pipeline.SnsConfig(
         bins=16, rows=8, log2_cols=14, top_k=args.top_k,
         embedder="tsne" if args.tsne else "umap", max_replicas=4,
-        embed_backend=args.embed_backend)
+        embed_backend=args.embed_backend,
+        embed_knn_method=args.knn_method)
     res = pipeline.run(
         cfg, jnp.asarray(pts),
         tsne_cfg=TsneConfig(n_iter=250),

@@ -56,4 +56,8 @@ CANCER_1M = SnsConfig(
     # representatives spread far wider than the blob regimes a fixed G
     # was tuned on, and a re-spaced fixed grid would coarsen with span.
     embed_backend="sparse", embed_block=1024, embed_knn=0, embed_grid=256,
-    embed_grid_interval=0.5, embed_grid_max=1024)
+    embed_grid_interval=0.5, embed_grid_max=1024,
+    # a million reps is firmly past the exact-kNN wall: the approximate
+    # engine (core.ann, recall ≥ 0.9) replaces the O(N²·D) build —
+    # "ann" states it explicitly ("auto" would pick it here anyway)
+    embed_knn_method="ann")

@@ -1,0 +1,470 @@
+"""Approximate kNN engine: sketch-native bucketing + NN-descent refinement.
+
+Kills the last O(N²·D) pass in the pipeline (ROADMAP item 1): the exact
+kNN build both embedders run once at setup.  Two composable stages, both
+fixed-shape and fully jittable:
+
+**Stage 1 — multi-probe grid-cell bucketing** (the candidate generator).
+For each of ``probes`` random rotations: rotate, quantize the leading
+``key_dims`` coordinates onto a 2^bits grid (the same floor/clip
+quantization as ``core.quantize``, but with *traced* bounds — GridSpec's
+corners are static), interleave the bit-planes into a Morton cell key,
+and sort points by key — one lexsort per probe, the same sort-then-scan
+layout ``candidates.sorted_runs`` uses for the ingest fold.  Real cell
+runs have data-dependent lengths, so instead of RLE run boundaries the
+scan uses the fixed-shape relaxation: consecutive **tiles of B sorted
+rows**, each scored against a shared window of its own tile plus a
+one-tile halo on each side (C = 3B candidates — every point within B−1
+sorted positions is always in-window).  The (B, D)×(D, C) distance block
+is MXU-shaped and dispatches to the Pallas tiled distance-scan kernel
+(``kernels.knn_tile``, interpret-mode on CPU) or its XLA reference;
+``top_k`` k-selects per row, and probes merge by per-row id-dedupe +
+k-merge (``lax.top_k``), exactly the reservoir-merge discipline of the
+ingest core.
+
+**Stage 2 — NN-descent refinement** (Dong et al.; the UMAP paper §4
+ships it as the standard approximate-kNN path).  A single jitted
+``fori_loop`` with fixed shapes: each iteration samples, per point,
+``sample`` forward neighbors and ``sample`` reverse edges (reverse lists
+come from one dst-sort of the edge list + ``coo.row_bounds`` — the
+repo's scatter-free sorted-COO idiom — with a random in-list window
+offset), expands to the sampled neighbors' own neighbor lists, scores
+candidates exactly, and k-merges into the current graph.  Early exit: a
+round that changes ≤ ``delta·N·k`` entries flips a ``done`` flag and
+``lax.cond`` skips the heavy work of the remaining iterations (the loop
+stays a single fixed-trip-count ``fori_loop`` in the jaxpr).
+
+No (N, N) buffer anywhere (jaxpr-regression-tested): stage 1 peaks at
+O(N·D + N·k), stage 2 at O(N·k + block·C).
+
+**Mesh path** (1-D embed mesh, ``core.mesh``): stage 1 shards the tile
+scan — each device scores a contiguous slice of sorted tiles against its
+own halo windows (embarrassingly parallel; sort and probe-merge are
+replicated).  Stage 2 row-block-shards the refinement: each device
+refines its contiguous row block; the per-iteration collectives are one
+``all_gather`` of the (padded) neighbor blocks and one scalar ``psum``
+of the update count.  RNG draws are keyed per *global row id*
+(``fold_in``), so mesh and single-device results are bit-identical
+(tests/test_mesh_embed.py).
+
+Entry point: :func:`ann_knn_graph`, dispatched via
+``neighbors.knn_graph(method="ann"|"auto")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coo
+from repro.core import mesh as mesh_mod
+from repro.kernels import knn_tile
+
+_KEY_MAX = jnp.uint32(0xFFFFFFFF)
+_TILE_CHUNK = 8          # sorted tiles scored per lax.map step (stage 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnConfig:
+    """Static knobs for the approximate kNN build (hashable: jit-static).
+
+    probes          random-rotation bucketing passes k-merged in stage 1
+    bucket          sorted tile size B (window = 3B; lifted to ≥ k)
+    bits            quantization bit-planes per key dim (clamped so the
+                    Morton key fits 30 bits)
+    key_dims        leading rotated coordinates folded into the cell key
+    iters           NN-descent iteration cap (single fori_loop trip count)
+    sample          per-side NN-descent sample m: m forward + m reverse
+                    seeds, each expanded to m of its neighbors
+                    (candidates/round = 2m² + m).  Rounds are dominated
+                    by fixed per-round sort overhead on CPU, so a large
+                    m with few iters beats a small m with many: the
+                    defaults (m=16, 4 rounds) beat the recall ten m=8
+                    rounds reached at ~half the wall-clock
+    delta           early-exit threshold: stop once a round updates
+                    ≤ delta·N·k graph entries
+    rev_cols        reverse edges are sampled from each row's nearest
+                    ``rev_cols`` neighbor slots only — the dst-sort is
+                    the other per-round fixed cost and near in-edges
+                    carry nearly all the signal (0 = all k slots)
+    block           row block for the refinement distance pass
+    tile            stage-1 distance backend: "xla" | "pallas"
+    interpret       run the Pallas kernel in interpret mode (CPU)
+    auto_threshold  knn_graph(method="auto") switches to ann above this N
+    seed            RNG seed for rotations and descent sampling
+    """
+    probes: int = 4
+    bucket: int = 128
+    bits: int = 10
+    key_dims: int = 3
+    iters: int = 4
+    sample: int = 16
+    delta: float = 2e-3
+    rev_cols: int = 32
+    block: int = 4096
+    tile: str = "xla"
+    interpret: bool = True
+    auto_threshold: int = 1 << 16
+    seed: int = 0
+
+
+def _bucket_size(cfg: AnnConfig, k: int) -> int:
+    # every row needs ≥ k real in-window candidates; the window always
+    # holds ≥ min(n−1, B) real non-self rows, so lift B to k
+    return max(cfg.bucket, k)
+
+
+def _cell_keys(xr: jnp.ndarray, bits: int, key_dims: int) -> jnp.ndarray:
+    """Morton cell key of the leading rotated coordinates — uint32 (N,).
+
+    Quantizes each of m = min(D, key_dims) coordinates to 2^bits bins
+    between its (traced) min/max, then interleaves the bit-planes so
+    lexicographic key order is space-filling-curve order: points sorted
+    by key land near their cell neighbors, which is what the fixed-tile
+    halo window exploits.  bits·m is clamped to 30 so real keys stay
+    below the 0xFFFFFFFF padding sentinel.
+    """
+    n, d = xr.shape
+    m = max(1, min(d, key_dims))
+    bits = max(1, min(bits, 30 // m))
+    u = xr[:, :m]
+    lo = jnp.min(u, axis=0)
+    span = jnp.maximum(jnp.max(u, axis=0) - lo, 1e-30)
+    nbins = jnp.float32(1 << bits)
+    q = jnp.clip(jnp.floor((u - lo) / span * nbins),
+                 0, nbins - 1).astype(jnp.uint32)
+    key = jnp.zeros((n,), jnp.uint32)
+    for b in range(bits):
+        for j in range(m):
+            key = key | (((q[:, j] >> b) & 1) << (b * m + j))
+    return key
+
+
+def _probe_layout(x: jnp.ndarray, k: int, key: jnp.ndarray, cfg: AnnConfig,
+                  chunk_tiles: int):
+    """One probe's sorted tile layout: rotate → cell keys → key-sort →
+    fixed B-row query tiles with 3B halo candidate windows.
+
+    Returns (qx (T,B,D), qid (T,B), cx (T,3B,D), cid (T,3B), inv) where T
+    is padded to a multiple of ``chunk_tiles`` (junk tiles carry id −1)
+    and ``inv`` maps original row i to its sorted position.
+    """
+    n, d = x.shape
+    b = _bucket_size(cfg, k)
+    nb = -(-n // b)
+    nbp = -(-nb // chunk_tiles) * chunk_tiles
+    n_sort = nb * b
+    n_lay = nbp * b
+
+    g = jax.random.normal(key, (d, d), dtype=jnp.float32)
+    rot, _ = jnp.linalg.qr(g)
+    keys = _cell_keys(x.astype(jnp.float32) @ rot, cfg.bits, cfg.key_dims)
+    keys_p = jnp.pad(keys, (0, n_sort - n), constant_values=_KEY_MAX)
+    order = jnp.argsort(keys_p, stable=True)                 # (n_sort,)
+    ids = jnp.where(jnp.arange(n_sort) < n,
+                    jnp.arange(n_sort), -1).astype(jnp.int32)
+    sx = jnp.pad(x, ((0, n_sort - n), (0, 0)))[order]
+    sid = ids[order]
+    # extend to the chunk-padded tile count, then halo-pad a tile per side
+    sx = jnp.pad(sx, ((b, n_lay - n_sort + b), (0, 0)))
+    sid = jnp.pad(sid, ((b, n_lay - n_sort + b),), constant_values=-1)
+    qx = sx[b:b + n_lay].reshape(nbp, b, d)
+    qid = sid[b:b + n_lay].reshape(nbp, b)
+    cx = jnp.concatenate([sx[:n_lay].reshape(nbp, b, d), qx,
+                          sx[2 * b:].reshape(nbp, b, d)], axis=1)
+    cid = jnp.concatenate([sid[:n_lay].reshape(nbp, b), qid,
+                           sid[2 * b:].reshape(nbp, b)], axis=1)
+    inv = jnp.argsort(order, stable=True)
+    return qx, qid, cx, cid, inv
+
+
+def _tiles_topk(qx, qid, cx, cid, k: int, cfg: AnnConfig,
+                chunk_tiles: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Score every tile against its window, k-select per row.  Streams
+    ``chunk_tiles`` tiles per ``lax.map`` step so the distance blocks
+    never materialize at once.  Returns (idx, d2) in sorted-row layout,
+    d2 ascending (junk rows: idx −1, d2 +inf)."""
+    nbp, b, d = qx.shape
+    c = cx.shape[1]
+    nch = nbp // chunk_tiles
+
+    def step(args):
+        tqx, tqid, tcx, tcid = args
+        d2 = knn_tile.distance_tiles(tqx, tqid, tcx, tcid,
+                                     tile=cfg.tile, interpret=cfg.interpret)
+        neg, pos = jax.lax.top_k(-d2, k)                     # (chunk, B, k)
+        idx = jnp.take_along_axis(
+            jnp.broadcast_to(tcid[:, None, :], d2.shape), pos, axis=2)
+        return idx.astype(jnp.int32), -neg
+
+    idx, d2 = jax.lax.map(step, (qx.reshape(nch, chunk_tiles, b, d),
+                                 qid.reshape(nch, chunk_tiles, b),
+                                 cx.reshape(nch, chunk_tiles, c, d),
+                                 cid.reshape(nch, chunk_tiles, c)))
+    return idx.reshape(-1, k), d2.reshape(-1, k)
+
+
+def _dedupe_topk(idx: jnp.ndarray, d2: jnp.ndarray, k: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row k-merge: drop duplicate ids (stable — first occurrence
+    wins, so callers concat [current, new]) and invalid ids (< 0), then
+    keep the k nearest.  Returns (idx (R,k), d2 (R,k)) with d2 ascending.
+    """
+    order = jnp.argsort(idx, axis=1, stable=True)
+    idx_s = jnp.take_along_axis(idx, order, axis=1)
+    d2_s = jnp.take_along_axis(d2, order, axis=1)
+    dup = jnp.concatenate([jnp.zeros((idx.shape[0], 1), bool),
+                           idx_s[:, 1:] == idx_s[:, :-1]], axis=1)
+    d2_s = jnp.where(dup | (idx_s < 0), jnp.inf, d2_s)
+    neg, pos = jax.lax.top_k(-d2_s, k)
+    return jnp.take_along_axis(idx_s, pos, axis=1), -neg
+
+
+def _merge_probes(probes, k: int):
+    """k-merge the per-probe (idx, d2) results in ONE dedupe pass.
+    k-merge is associative, so a single wide merge returns the same set
+    as the pairwise chain at roughly half the (argsort-dominated) cost;
+    a single probe needs no merge at all."""
+    if len(probes) == 1:
+        return probes[0]
+    return _dedupe_topk(jnp.concatenate([p[0] for p in probes], axis=1),
+                        jnp.concatenate([p[1] for p in probes], axis=1), k)
+
+
+def _layout_pos(g, rows_per: int, rpp: int):
+    """Layout position of global row g: devices own ``rows_per``
+    consecutive global rows, padded to ``rpp`` layout slots each.  The
+    single-device layout is the identity (rows_per == rpp)."""
+    if rows_per == rpp:
+        return g
+    return (g // rows_per) * rpp + g % rows_per
+
+
+def _reverse_sample(idx_full: jnp.ndarray, rid_full: jnp.ndarray,
+                    key: jnp.ndarray, m: int, r: int, n: int) -> jnp.ndarray:
+    """``m`` sampled reverse edges per global row: sources j that list i
+    as a neighbor.  One dst-sort of the edge list + ``coo.row_bounds``
+    (no scatter), then a random contiguous window per row.  Rows listed
+    by fewer than m sources pad with −1.  Only the nearest ``r`` slots
+    of each neighbor list feed the sort (``AnnConfig.rev_cols``): the
+    dst-sort of N·r keys is the round's fixed cost, and near in-edges
+    carry nearly all the reverse-neighbor signal.  Replicated and
+    draw-aligned across mesh layouts: padded layout rows hold dst −1
+    (sorted out by the bounds) and real edges keep (global row, slot)
+    order."""
+    dst = idx_full[:, :r].reshape(-1)
+    e = dst.size
+    order = jnp.argsort(dst, stable=True)
+    bounds = coo.row_bounds(dst[order], n)
+    lo, hi = bounds[:-1], bounds[1:]
+    cnt = hi - lo
+    off = jax.random.randint(key, (n,), 0, 1 << 30) \
+        % jnp.maximum(cnt - m + 1, 1)
+    j = jnp.arange(m, dtype=jnp.int32)
+    pos = jnp.clip(jnp.minimum(lo[:, None] + off[:, None] + j[None, :],
+                               hi[:, None] - 1), 0, e - 1)
+    src = rid_full[order[pos] // r]                          # (n, m)
+    return jnp.where(j[None, :] < cnt[:, None], src, -1)
+
+
+def _refine_chunk(x, idx_full, rev_all, idxc, d2c, ridc, key,
+                  cfg: AnnConfig, k: int, n: int, rows_per: int, rpp: int):
+    """One NN-descent round for a block of rows: sample forward + reverse
+    seeds, expand to their neighbor lists, score exactly, k-merge.
+    Returns (idx, d2, changed) — padded rows (id −1) pass through."""
+    rows = ridc.shape[0]
+    m = cfg.sample
+    ndraw = m + 2 * m * m
+    rid_safe = jnp.maximum(ridc, 0)
+    # per-global-row keys: draws are identical for any row blocking (the
+    # mesh path's bit-exactness hinges on this)
+    draws = jax.vmap(lambda r: jax.random.randint(
+        jax.random.fold_in(key, r), (ndraw,), 0, k))(rid_safe)
+    fwd = jnp.take_along_axis(idxc, draws[:, :m], axis=1)    # (rows, m)
+    rev = jnp.where(ridc[:, None] >= 0, rev_all[rid_safe], -1)
+    union = jnp.concatenate([fwd, rev], axis=1)              # (rows, 2m)
+    upos = _layout_pos(jnp.clip(union, 0, n - 1), rows_per, rpp)
+    # gather ONLY the m sampled slots of each seed's neighbor list — a
+    # flat (rows, 2m, m) pick, not the (rows, 2m, k) lists (k ≫ m makes
+    # the full-list gather the round's dominant memory traffic)
+    ecols = draws[:, m:].reshape(rows, 2 * m, m)
+    expand = idx_full.reshape(-1)[upos[:, :, None] * k + ecols]
+    expand = expand.reshape(rows, 2 * m * m)
+    expand = jnp.where(jnp.repeat(union >= 0, m, axis=1), expand, -1)
+    cand = jnp.concatenate([rev, expand], axis=1)            # (rows, C)
+    xi = x[rid_safe]
+    xc = x[jnp.clip(cand, 0, n - 1)]
+    d2n = jnp.sum((xi[:, None, :] - xc) ** 2, axis=2)
+    d2n = jnp.where((cand < 0) | (cand == ridc[:, None]), jnp.inf, d2n)
+    # Mask candidates already present in the row: they sit below τ by
+    # construction (they *are* the near entries), so without this they
+    # crowd out every selection slot and the descent stalls.  Bonus: at
+    # the fixpoint all candidates are members, every slot selects −1,
+    # and the merge returns the row bit-equal — the early-exit `changed`
+    # counter hits exactly zero.
+    row_sorted = jnp.sort(idxc, axis=1)
+    pos = jax.vmap(jnp.searchsorted)(row_sorted, cand)
+    member = jnp.take_along_axis(
+        row_sorted, jnp.clip(pos, 0, k - 1), axis=1) == cand
+    d2n = jnp.where(member, jnp.inf, d2n)
+    # Two-stage selection: a candidate at or beyond the row's current kth
+    # distance can never enter the merged top-k (τ-filter), and only a
+    # handful can per round — pre-select the s best by distance with a
+    # cheap partial top_k, then dedupe-merge only (k + s) wide.  The
+    # stable argsort inside _dedupe_topk is the round's dominant cost on
+    # CPU (~5× a top_k of the same width), so its width must not scale
+    # with the candidate count C = 2m² + m.
+    tau = d2c[:, k - 1:k]
+    neg, cpos = jax.lax.top_k(-jnp.where(d2n >= tau, jnp.inf, d2n),
+                              min(cand.shape[1], max(2 * m, 48)))
+    cd = -neg
+    ci = jnp.where(jnp.isinf(cd), -1,
+                   jnp.take_along_axis(cand, cpos, axis=1))
+    mi, md = _dedupe_topk(jnp.concatenate([idxc, ci], axis=1),
+                          jnp.concatenate([d2c, cd], axis=1), k)
+    live = ridc[:, None] >= 0
+    mi = jnp.where(live, mi, idxc)
+    md = jnp.where(live, md, d2c)
+    changed = jnp.sum((mi != idxc) & live).astype(jnp.int32)
+    return mi, md, changed
+
+
+def _nn_descent(x, idx0, d20, row_ids, key, k: int, n: int, cfg: AnnConfig,
+                bl: int, rows_per: int, rpp: int, axis: Optional[str] = None,
+                rid_full: Optional[jnp.ndarray] = None):
+    """The refinement loop: a single fixed-trip-count ``fori_loop``.
+    Early exit via a ``done`` flag — converged iterations ``lax.cond``
+    past the heavy work; the (mesh-path) collectives stay outside the
+    cond so every device always executes the same collective sequence."""
+    r_loc = idx0.shape[0]
+    nc = r_loc // bl
+    thresh = cfg.delta * n * k
+
+    def body(it, carry):
+        idx, d2, done = carry
+        kit = jax.random.fold_in(key, it)
+        kr, kc = jax.random.split(kit)
+        if axis is None:
+            idx_full, rif = idx, row_ids
+        else:
+            idx_full = jax.lax.all_gather(idx, axis, axis=0, tiled=True)
+            rif = rid_full
+
+        def live(args):
+            idx, d2 = args
+            r = min(cfg.rev_cols, k) if cfg.rev_cols else k
+            rev_all = _reverse_sample(idx_full, rif, kr, cfg.sample, r, n)
+            ni, nd, ch = jax.lax.map(
+                lambda a: _refine_chunk(x, idx_full, rev_all, *a, kc, cfg,
+                                        k, n, rows_per, rpp),
+                (idx.reshape(nc, bl, k), d2.reshape(nc, bl, k),
+                 row_ids.reshape(nc, bl)))
+            return ni.reshape(r_loc, k), nd.reshape(r_loc, k), jnp.sum(ch)
+
+        def skip(args):
+            return args[0], args[1], jnp.zeros((), jnp.int32)
+
+        idx, d2, changed = jax.lax.cond(done, skip, live, (idx, d2))
+        if axis is not None:
+            changed = jax.lax.psum(changed, axis)
+        return idx, d2, done | (changed <= thresh)
+
+    idx, d2, _ = jax.lax.fori_loop(0, cfg.iters, body,
+                                   (idx0, d20, jnp.bool_(False)))
+    return idx, d2
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def _ann_build(x: jnp.ndarray, k: int, cfg: AnnConfig):
+    """Single-device build: multi-probe candidates → NN-descent.
+    Returns (idx (N,k) int32, d2 (N,k) ascending squared distances)."""
+    n = x.shape[0]
+    kp, kd = jax.random.split(jax.random.PRNGKey(cfg.seed))
+    probes = []
+    for p in range(cfg.probes):
+        lay = _probe_layout(x, k, jax.random.fold_in(kp, p), cfg,
+                            _TILE_CHUNK)
+        ti, td = _tiles_topk(*lay[:4], k, cfg, _TILE_CHUNK)
+        probes.append((ti[lay[4][:n]], td[lay[4][:n]]))
+    idx, d2 = _merge_probes(probes, k)
+    bl = min(cfg.block, n)
+    r_total = -(-n // bl) * bl
+    rid = jnp.where(jnp.arange(r_total) < n,
+                    jnp.arange(r_total), -1).astype(jnp.int32)
+    idx_l = jnp.pad(idx, ((0, r_total - n), (0, 0)), constant_values=-1)
+    d2_l = jnp.pad(d2, ((0, r_total - n), (0, 0)),
+                   constant_values=jnp.inf)
+    idx_l, d2_l = _nn_descent(x, idx_l, d2_l, rid, kd, k, n, cfg, bl,
+                              r_total, r_total)
+    return idx_l[:n], d2_l[:n]
+
+
+def _ann_build_mesh(x: jnp.ndarray, k: int, cfg: AnnConfig, mesh):
+    """Mesh build: stage 1 shards the tile scan (contiguous tile slices,
+    replicated sort), stage 2 shards the refinement by row block.  Per
+    descent iteration the only collectives are one all_gather of the
+    neighbor blocks and one psum of the update count; results are
+    bit-identical to :func:`_ann_build`."""
+    axis = mesh_mod.mesh_axis(mesh)
+    s = mesh_mod.axis_size(mesh, axis)
+    P = mesh_mod.P
+    n = x.shape[0]
+    kp, kd = jax.random.split(jax.random.PRNGKey(cfg.seed))
+
+    @mesh_mod.shard_map_compat(mesh=mesh,
+                               in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                               out_specs=(P(axis), P(axis)))
+    def tiles_spmd(qx, qid, cx, cid):
+        return _tiles_topk(qx, qid, cx, cid, k, cfg, _TILE_CHUNK)
+
+    probes = []
+    for p in range(cfg.probes):
+        lay = _probe_layout(x, k, jax.random.fold_in(kp, p), cfg,
+                            _TILE_CHUNK * s)
+        ti, td = tiles_spmd(*lay[:4])
+        probes.append((ti[lay[4][:n]], td[lay[4][:n]]))
+    idx, d2 = _merge_probes(probes, k)
+
+    rows_per, _ = mesh_mod.row_block(n, s)
+    bl = min(cfg.block, rows_per)
+    rpp = -(-rows_per // bl) * bl
+    r_total = s * rpp
+    lay_j = jnp.arange(r_total) % rpp
+    gid = (jnp.arange(r_total) // rpp) * rows_per + lay_j
+    rid = jnp.where((lay_j < rows_per) & (gid < n), gid, -1).astype(jnp.int32)
+    safe = jnp.maximum(rid, 0)
+    live = rid[:, None] >= 0
+    idx_l = jnp.where(live, idx[safe], -1)
+    d2_l = jnp.where(live, d2[safe], jnp.inf)
+
+    @mesh_mod.shard_map_compat(
+        mesh=mesh, in_specs=(P(), P(axis), P(axis), P(axis), P(), P()),
+        out_specs=(P(axis), P(axis)))
+    def descent_spmd(xf, idx_b, d2_b, rid_b, rid_f, key):
+        return _nn_descent(xf, idx_b, d2_b, rid_b, key, k, n, cfg, bl,
+                           rows_per, rpp, axis=axis, rid_full=rid_f)
+
+    idx_l, d2_l = descent_spmd(x, idx_l, d2_l, rid, rid, kd)
+    pos = _layout_pos(jnp.arange(n), rows_per, rpp)
+    return idx_l[pos], d2_l[pos]
+
+
+def ann_knn_graph(x: jnp.ndarray, k: int, cfg: Optional[AnnConfig] = None,
+                  *, mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximate kNN graph (excluding self): (indices (N,k), dists
+    (N,k)) — the drop-in sub-quadratic replacement for the exact
+    ``neighbors.knn_graph``, same return convention (distances are
+    euclidean, ascending per row).  Recall ≥ 0.9 vs exact on blob data
+    at the default config (property-tested; benchmarks/bench_knn_recall
+    tracks it)."""
+    cfg = cfg if cfg is not None else AnnConfig()
+    n = x.shape[0]
+    k = min(int(k), max(n - 1, 1))
+    if mesh is None:
+        idx, d2 = _ann_build(x, k, cfg)
+    else:
+        idx, d2 = _ann_build_mesh(x, k, cfg, mesh)
+    return idx, jnp.sqrt(jnp.maximum(d2, 0.0))

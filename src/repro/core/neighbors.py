@@ -1,11 +1,20 @@
 """Shared neighbor-graph machinery for the downstream embedders.
 
-Both embedders need the exact kNN graph of the (weighted) heavy-hitter
+Both embedders need the kNN graph of the (weighted) heavy-hitter
 representatives — UMAP to build its fuzzy simplicial set, and the sparse
 tSNE backend to restrict perplexity calibration and attraction to the
-kNN support.  The graph build is the only remaining O(N²·D) pass in the
-sub-quadratic embed stage, and it runs *once* at setup, streamed in row
-blocks so peak memory stays O(block · N).
+kNN support.  :func:`knn_graph` is the single entry point and picks the
+build with ``method=``:
+
+* ``"exact"`` — the O(N²·D) brute-force pass, streamed in row blocks so
+  peak memory stays O(block · N);
+* ``"ann"``   — the sub-quadratic approximate engine in
+  :mod:`repro.core.ann` (multi-probe grid-cell bucketing + NN-descent
+  refinement, recall ≥ 0.9 vs exact on blob data);
+* ``"auto"``  — exact below ``AnnConfig.auto_threshold`` points, ann
+  above (the default everywhere a config plumbs through).
+
+With the ann path the embed stage has no O(N²) pass left anywhere.
 
 Also hosts :func:`reverse_edge_values` — value of each directed edge's
 reverse (0 if absent), via one sort + binary search (E log E, no (N, N)
@@ -24,6 +33,14 @@ import jax.numpy as jnp
 from repro.core import mesh as mesh_mod
 from repro.core.coo import dedupe_edges, row_bounds  # noqa: F401 (re-export)
 from repro.core.tsne import pairwise_sq_dists
+
+# reverse_edge_values packs edge (i, j) into the scalar i·n + j.  The max
+# key is (n−1)·n + (n−1) = n² − 1, so the packed uint32 path is valid iff
+# n² ≤ 2³², i.e. n ≤ ⌊√2³²⌋ = 2¹⁶ — derived here once; the boundary is
+# regression-tested at N = 2¹⁶ and 2¹⁶ + 1 (tests/test_ann.py).
+PACKED_KEY_N_MAX = 1 << 16
+assert PACKED_KEY_N_MAX ** 2 - 1 <= 2 ** 32 - 1
+assert (PACKED_KEY_N_MAX + 1) ** 2 - 1 > 2 ** 32 - 1
 
 
 def _knn_rows(x_rows: jnp.ndarray, row_ids: jnp.ndarray, x: jnp.ndarray,
@@ -56,21 +73,38 @@ def _knn_rows(x_rows: jnp.ndarray, row_ids: jnp.ndarray, x: jnp.ndarray,
 
 
 def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None,
-              mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact kNN (excluding self): returns (indices (N,k), dists (N,k)).
+              mesh=None, method: str = "exact", ann=None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """kNN graph (excluding self): returns (indices (N,k), dists (N,k)).
 
-    With ``block`` set (and < N) the distance matrix is streamed in row
-    chunks of that size — peak memory O(block · N), never (N, N).
+    ``k`` is clamped to N−1 (a point has at most N−1 neighbors).
+    ``method`` picks the build:
+
+    * ``"exact"`` (default) — brute force.  With ``block`` set (and < N)
+      the distance matrix is streamed in row chunks of that size — peak
+      memory O(block · N), never (N, N).
+    * ``"ann"`` — the sub-quadratic approximate engine
+      (:func:`repro.core.ann.ann_knn_graph`); ``ann`` is an optional
+      ``AnnConfig`` with the recall/probe knobs.
+    * ``"auto"`` — ``"exact"`` for N ≤ ``AnnConfig.auto_threshold``,
+      ``"ann"`` above it.
 
     With ``mesh`` (a 1-D embed mesh, see ``core.mesh``) the build is
     row-block sharded under ``shard_map``: each device owns a contiguous
     padded row range, computes its distance blocks against the replicated
     ``x`` (embarrassingly parallel), and k-merges locally via ``top_k`` —
-    the per-row results are identical to the single-device path
-    (tests/test_mesh_embed.py).  The only collective is the implicit
-    all-concatenation of the per-block outputs.
+    the per-row results are identical to the single-device path for both
+    methods (tests/test_mesh_embed.py).
     """
     n = x.shape[0]
+    k = min(int(k), max(n - 1, 1))
+    if method not in ("exact", "auto", "ann"):
+        raise ValueError(f"unknown kNN method: {method!r}")
+    if method != "exact":
+        from repro.core import ann as ann_mod  # lazy: avoid import cycle
+        cfg = ann if ann is not None else ann_mod.AnnConfig()
+        if method == "ann" or n > cfg.auto_threshold:
+            return ann_mod.ann_knn_graph(x, k, cfg, mesh=mesh)
     if mesh is None:
         if block is None or block >= n:
             d = pairwise_sq_dists(x)
@@ -105,12 +139,13 @@ def reverse_edge_values(knn_idx: jnp.ndarray, vals_nk: jnp.ndarray,
 
     Sort-based: pack each edge (i, j) into a scalar key, sort once, and
     binary-search every reverse key (j, i).  E log E work, O(E) memory —
-    no (N, N) temp.  Keys fit uint32 iff N ≤ 2¹⁶; beyond that we fall back
-    to a gather: the reverse of (i, j) can only live in j's kNN row, so
-    compare knn_idx[j] against i (E·k work, still sparse).
+    no (N, N) temp.  Keys fit uint32 iff n² ≤ 2³², i.e. N ≤
+    ``PACKED_KEY_N_MAX`` (= 2¹⁶, derived at module top); beyond that we
+    fall back to a gather: the reverse of (i, j) can only live in j's
+    kNN row, so compare knn_idx[j] against i (E·k work, still sparse).
     """
     e = rows.shape[0]
-    if n <= (1 << 16):
+    if n <= PACKED_KEY_N_MAX:
         n32 = jnp.uint32(n)
         fwd = rows.astype(jnp.uint32) * n32 + cols.astype(jnp.uint32)
         rev = cols.astype(jnp.uint32) * n32 + rows.astype(jnp.uint32)

@@ -70,6 +70,13 @@ class SnsConfig:
     embed_grid_interval: float = 0.0
     embed_grid_max: int = 1024
     embed_cic: str = "xla"         # grid splat/gather: "xla" | "pallas"
+    # kNN build for BOTH embedders: "exact" (brute force, O(N²·D)),
+    # "ann" (sub-quadratic sketch-bucketing + NN-descent, core.ann), or
+    # "auto" (exact below ann.AnnConfig.auto_threshold points, ann
+    # above — the safe default).  embed_ann optionally carries the
+    # recall/probe knobs as an ann.AnnConfig (None = defaults)
+    embed_knn_method: str = "auto"
+    embed_ann: object = None       # None | ann.AnnConfig
     # mesh-parallel embed stage: None = single device; an int builds a 1-D
     # mesh of that many local devices; a ready jax Mesh passes through.
     # Row-block-shards the kNN build + the whole optimizer loop of BOTH
@@ -228,14 +235,18 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
                                  grid_size=cfg.embed_grid,
                                  grid_interval=cfg.embed_grid_interval,
                                  grid_max=cfg.embed_grid_max,
-                                 cic=cfg.embed_cic)
+                                 cic=cfg.embed_cic,
+                                 knn_method=cfg.embed_knn_method,
+                                 ann=cfg.embed_ann)
         emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj,
                                    mesh=embed_mesh)
     elif cfg.embedder == "umap":
         # embed_block bounds the kNN row-block on the UMAP side too
         # (tests/test_umap_scatter_free.py pins the propagation)
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
-        uc = dataclasses.replace(uc, block=cfg.embed_block)
+        uc = dataclasses.replace(uc, block=cfg.embed_block,
+                                 knn_method=cfg.embed_knn_method,
+                                 ann=cfg.embed_ann)
         emb = umap_mod.run_umap(kembed, x, uc, weights=wj, mesh=embed_mesh)
     else:
         raise ValueError(f"unknown embedder {cfg.embedder!r}")

@@ -112,6 +112,12 @@ class TsneConfig:
     grid_max: int = 1024           # adaptive: G cap (bounds the FFT cost)
     adaptive_interval: int = 50    # adaptive: iterations between G checks
     cic: str = "xla"               # grid splat/gather: "xla" | "pallas"
+    # kNN build for the sparse backend: "exact" | "auto" | "ann" — "auto"
+    # switches to the approximate engine (core.ann) above
+    # AnnConfig.auto_threshold points; ``ann`` carries its knobs (an
+    # ann.AnnConfig — hashable, so the config stays jit-static)
+    knn_method: str = "auto"
+    ann: Optional[object] = None
 
 
 class PointStats(NamedTuple):
@@ -346,16 +352,19 @@ def build_sparse_p(x: jnp.ndarray, perplexity: float,
                    k: Optional[int] = None,
                    weights: Optional[jnp.ndarray] = None,
                    search_iters: int = 50, block: int = 512,
-                   mesh=None) -> SparseP:
+                   mesh=None, method: str = "exact", ann=None) -> SparseP:
     """kNN graph + kNN calibration + symmetrized COO P — the sparse
-    backend's one-time setup (the only O(N²·D) pass, blocked; with
-    ``mesh`` the kNN build row-block shards under ``shard_map``)."""
+    backend's one-time setup.  ``method``/``ann`` pick the kNN build
+    (exact O(N²·D) blocked, or the sub-quadratic approximate engine —
+    see ``neighbors.knn_graph``); with ``mesh`` either build row-block
+    shards under ``shard_map``."""
     from repro.core import neighbors
     n = x.shape[0]
     if k is None:
         k = max(8, int(round(3.0 * perplexity)))
     k = min(k, n - 1)          # a kNN row can never exceed the other points
-    idx, dist = neighbors.knn_graph(x, k, block=block, mesh=mesh)
+    idx, dist = neighbors.knn_graph(x, k, block=block, mesh=mesh,
+                                    method=method, ann=ann)
     return sparse_p_from_knn(idx, dist, perplexity, weights=weights,
                              search_iters=search_iters)
 
@@ -744,7 +753,8 @@ def _sparse_setup_p_mesh(x: jnp.ndarray, weights, *, cfg: TsneConfig,
     return build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
                           weights=weights,
                           search_iters=cfg.sigma_search_iters,
-                          block=cfg.block, mesh=mesh)
+                          block=cfg.block, mesh=mesh,
+                          method=cfg.knn_method, ann=cfg.ann)
 
 
 def kl_divergence(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -897,7 +907,8 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
         sp = build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
                             weights=weights,
                             search_iters=cfg.sigma_search_iters,
-                            block=cfg.block)
+                            block=cfg.block,
+                            method=cfg.knn_method, ann=cfg.ann)
 
         def grad_fn(y, exag):
             return sparse_grad(y, sp, exag, grid_size=cfg.grid_size,
@@ -950,7 +961,8 @@ def _sparse_setup(key: jax.Array, x: jnp.ndarray, weights, *,
     sp = build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
                         weights=weights,
                         search_iters=cfg.sigma_search_iters,
-                        block=cfg.block)
+                        block=cfg.block,
+                        method=cfg.knn_method, ann=cfg.ann)
     y0 = 1e-4 * jax.random.normal(key, (x.shape[0], cfg.dims))
     return sp, TsneState(y=y0, velocity=jnp.zeros_like(y0),
                          gains=jnp.ones_like(y0))

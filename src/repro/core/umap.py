@@ -77,6 +77,11 @@ class UmapConfig:
     init_scale: float = 10.0
     sigma_search_iters: int = 50
     block: int = 4096              # kNN row-block; N <= block -> dense path
+    # kNN build: "exact" | "auto" | "ann" — "auto" switches to the
+    # approximate engine (core.ann) above AnnConfig.auto_threshold
+    # points; ``ann`` carries its knobs (an ann.AnnConfig)
+    knn_method: str = "auto"
+    ann: Optional[object] = None
 
 
 @functools.lru_cache(maxsize=None)
@@ -362,7 +367,8 @@ def run_umap(key: jax.Array, x: jnp.ndarray, cfg: UmapConfig,
     ``mesh`` row-block-shards both the kNN build and the SGD loop under
     ``shard_map`` (see :func:`optimize_embedding`)."""
     mesh = mesh_mod.resolve_mesh(mesh)
-    idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block, mesh=mesh)
+    idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block, mesh=mesh,
+                          method=cfg.knn_method, ann=cfg.ann)
     edges, memb = fuzzy_simplicial_set(idx, dist, weights=weights,
                                        search_iters=cfg.sigma_search_iters)
     return optimize_embedding(key, edges, memb, x.shape[0], cfg, mesh=mesh)

@@ -1,0 +1,210 @@
+"""Approximate kNN engine (core.ann): recall, exactness at tiny N,
+dispatch wiring, the Pallas distance tile, and the jaxpr contracts
+(no quadratic buffer, single fused refinement loop).
+
+The recall contract is the one the pipeline relies on when
+``knn_graph(method="auto")`` crosses ``AnnConfig.auto_threshold``:
+ann recall ≥ 0.9 against the exact graph on representative blob
+geometry.  CI additionally gates recall at bench scale via
+``benchmarks/bench_knn_recall.py --smoke``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from benchmarks.common import iter_jaxpr_avals
+from repro.core import ann, neighbors
+from repro.kernels import knn_tile
+
+
+def _points(n, dims, seed, clusters=8):
+    """Blobby geometry (what heavy-hitter representatives look like)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 4, (clusters, dims))
+    x = centers[rng.integers(0, clusters, n)] + rng.normal(0, 0.3, (n, dims))
+    return jnp.asarray(x.astype(np.float32))
+
+
+def _recall(ann_idx, exact_idx):
+    n, _ = exact_idx.shape
+    rows = np.arange(n, dtype=np.int64)[:, None]
+    return float(np.isin(np.asarray(ann_idx).astype(np.int64) + rows * n,
+                         np.asarray(exact_idx).astype(np.int64) + rows * n
+                         ).mean())
+
+
+# ------------------------------------------------------------------ recall
+@given(n=st.sampled_from((512, 777, 1024)), k=st.sampled_from((8, 15, 32)),
+       seed=st.integers(0, 50))
+@settings(max_examples=6, deadline=None)
+def test_ann_recall_at_least_090(n, k, seed):
+    """Property: ann recall ≥ 0.9 vs exact over blob draws — sizes
+    include a non-power-of-two (padding path) and k spanning the UMAP
+    and tSNE regimes."""
+    x = _points(n, 6, seed)
+    ei, _ = neighbors.knn_graph(x, k)
+    ai, _ = neighbors.knn_graph(x, k, method="ann")
+    assert _recall(ai, ei) >= 0.9
+
+
+@pytest.mark.parametrize("n,k,seed", [(512, 8, 0), (777, 15, 1),
+                                      (1024, 32, 2)])
+def test_ann_recall_fixed_cases(n, k, seed):
+    """Non-hypothesis fallback for minimal containers: the same recall
+    contract at three fixed (n, k, seed) points (including the padding
+    path at a non-power-of-two n)."""
+    x = _points(n, 6, seed)
+    ei, _ = neighbors.knn_graph(x, k)
+    ai, _ = neighbors.knn_graph(x, k, method="ann")
+    assert _recall(ai, ei) >= 0.9
+
+
+def test_ann_matches_exact_at_tiny_n():
+    """When one bucket window covers the whole set, stage 1 is already
+    exact and NN-descent is a fixpoint: identical indices, identical
+    (sqrt-consistent) distances."""
+    x = _points(100, 4, 3)
+    ei, ed = neighbors.knn_graph(x, 7)
+    ai, ad = neighbors.knn_graph(x, 7, method="ann")
+    np.testing.assert_array_equal(np.asarray(ai), np.asarray(ei))
+    # distances agree to fp (the tile kernel's qq+cc−2qc form vs the
+    # exact path's association differ in the last couple of ulps)
+    np.testing.assert_allclose(np.asarray(ad), np.asarray(ed), atol=1e-4)
+
+
+# ---------------------------------------------------------------- dispatch
+def test_knn_graph_method_dispatch():
+    x = _points(64, 4, 0)
+    ei, ed = neighbors.knn_graph(x, 5)
+    for method in ("exact", "auto"):     # auto stays exact below threshold
+        mi, md = neighbors.knn_graph(x, 5, method=method)
+        np.testing.assert_array_equal(np.asarray(mi), np.asarray(ei))
+        np.testing.assert_array_equal(np.asarray(md), np.asarray(ed))
+    with pytest.raises(ValueError, match="method"):
+        neighbors.knn_graph(x, 5, method="bogus")
+
+
+def test_ann_knn_graph_clamps_k():
+    x = _points(9, 3, 1)
+    idx, dist = ann.ann_knn_graph(x, 50)
+    assert idx.shape == (9, 8) and dist.shape == (9, 8)
+    ei, _ = neighbors.knn_graph(x, 50)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ei))
+
+
+# ------------------------------------------------------------ dedupe merge
+def test_dedupe_topk_drops_dups_and_invalid_keeps_first():
+    idx = jnp.array([[3, 1, 3, -1, 2]], jnp.int32)
+    d2 = jnp.array([[0.5, 0.2, 0.1, 0.0, 0.9]], jnp.float32)
+    mi, md = ann._dedupe_topk(idx, d2, 3)
+    # id 3 keeps its FIRST occurrence (0.5) — the keep-first contract the
+    # change-count convergence metric depends on; -1 is dropped entirely
+    np.testing.assert_array_equal(np.asarray(mi), [[1, 3, 2]])
+    np.testing.assert_allclose(np.asarray(md), [[0.2, 0.5, 0.9]])
+    # fixpoint: re-merging a deduped row with itself is the identity
+    mi2, md2 = ann._dedupe_topk(jnp.concatenate([mi, mi], axis=1),
+                                jnp.concatenate([md, md], axis=1), 3)
+    np.testing.assert_array_equal(np.asarray(mi2), np.asarray(mi))
+    np.testing.assert_array_equal(np.asarray(md2), np.asarray(md))
+
+
+def test_dedupe_topk_pads_short_rows_with_inf():
+    idx = jnp.array([[4, 4, -1, -1]], jnp.int32)
+    d2 = jnp.array([[1.0, 2.0, 0.0, 0.0]], jnp.float32)
+    mi, md = ann._dedupe_topk(idx, d2, 3)
+    assert int(mi[0, 0]) == 4 and float(md[0, 0]) == 1.0
+    assert np.isinf(np.asarray(md)[0, 1:]).all()
+
+
+# ------------------------------------------------------- Pallas tile kernel
+def test_distance_tiles_pallas_matches_xla_including_padding():
+    """The Pallas tile == the XLA reference on tiles containing padded
+    query rows (qid −1), padded candidates (cid −1), and self-pairs —
+    masked slots are +inf on both paths, finite slots agree."""
+    rng = np.random.default_rng(7)
+    t, b, c, d = 3, 8, 12, 5
+    qx = jnp.asarray(rng.normal(size=(t, b, d)).astype(np.float32))
+    cx = jnp.asarray(rng.normal(size=(t, c, d)).astype(np.float32))
+    qid = rng.integers(0, 40, (t, b)).astype(np.int32)
+    cid = rng.integers(0, 40, (t, c)).astype(np.int32)
+    qid[0, -3:] = -1                       # padded query rows
+    cid[:, -4:] = -1                       # padded candidates
+    cid[1, 0] = qid[1, 0]                  # a guaranteed self-pair
+    qid, cid = jnp.asarray(qid), jnp.asarray(cid)
+    ref = np.asarray(knn_tile.distance_tiles(qx, qid, cx, cid, tile="xla"))
+    got = np.asarray(knn_tile.distance_tiles(qx, qid, cx, cid,
+                                             tile="pallas", interpret=True))
+    np.testing.assert_array_equal(np.isinf(ref), np.isinf(got))
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(got[fin], ref[fin], atol=1e-4)
+    assert np.isinf(ref[1, 0][np.asarray(cid)[1] == int(qid[1, 0])]).all()
+
+    with pytest.raises(ValueError, match="tile backend"):
+        knn_tile.distance_tiles(qx, qid, cx, cid, tile="cuda")
+
+
+# --------------------------------------------------------- jaxpr contracts
+def test_ann_build_jaxpr_has_no_quadratic_buffer():
+    """The point of the engine: no (N, N)-scale intermediate anywhere in
+    the build (probe layout, tile scan, NN-descent).  Pinned two ways:
+    the largest buffer at N = 4096 is far below N² elements (it is the
+    O(block·C·D) candidate-coordinate gather of the descent round, so
+    the pin uses a sub-N block as the real > auto_threshold runs do),
+    and it grows LINEARLY when N doubles — a quadratic buffer would
+    grow 4×."""
+    k, cfg = 15, ann.AnnConfig(block=512)
+
+    def biggest(n):
+        x = jnp.zeros((n, 8), jnp.float32)
+        jaxpr = jax.make_jaxpr(lambda x_: ann._ann_build(x_, k, cfg))(x)
+        return max(int(np.prod(a.shape, dtype=np.int64))
+                   for a in iter_jaxpr_avals(jaxpr.jaxpr)
+                   if hasattr(a, "shape"))
+
+    b1, b2 = biggest(4096), biggest(8192)
+    assert b1 < 4096 * 4096 // 2, f"quadratic-scale buffer: {b1} elems"
+    assert b2 <= 2.5 * b1, (b1, b2)
+
+
+def test_nn_descent_is_one_fused_loop():
+    """The refinement is a SINGLE jitted fori_loop — exactly one
+    top-level loop primitive (static trip count lowers to scan), not an
+    unrolled or per-iteration-dispatched python loop."""
+    n, k = 512, 8
+    cfg = ann.AnnConfig(iters=5)
+    x = jnp.zeros((n, 4), jnp.float32)
+    idx0 = jnp.zeros((n, k), jnp.int32)
+    d20 = jnp.zeros((n, k), jnp.float32)
+    rid = jnp.arange(n, dtype=jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda x_, i_, d_, r_, key_: ann._nn_descent(
+            x_, i_, d_, r_, key_, k, n, cfg, n, n, n))(
+                x, idx0, d20, rid, jax.random.PRNGKey(0))
+    loops = sum(1 for eqn in jaxpr.jaxpr.eqns
+                if eqn.primitive.name in ("scan", "while"))
+    assert loops == 1, [e.primitive.name for e in jaxpr.jaxpr.eqns]
+
+
+# ------------------------------------- reverse_edge_values packed-key bound
+@pytest.mark.parametrize("n", [2 ** 16, 2 ** 16 + 1])
+def test_reverse_edge_values_across_packed_key_boundary(n):
+    """Regression for the uint32 packed-key bound: N = 2¹⁶ is the last
+    size where keys i·n + j fit uint32 (max key = 2³² − 1 exactly);
+    2¹⁶ + 1 must take the gather fallback.  A ring graph makes every
+    reverse value analytic, so both branches are checked for VALUES, not
+    just for not crashing."""
+    assert (n <= neighbors.PACKED_KEY_N_MAX) == (n == 2 ** 16)
+    i = np.arange(n, dtype=np.int64)
+    knn_idx = np.stack([(i + 1) % n, (i - 1) % n], 1).astype(np.int32)
+    vals_nk = (2.0 * i[:, None] + np.array([0.0, 1.0])).astype(np.float32)
+    rows = np.repeat(i, 2).astype(np.int32)
+    cols = knn_idx.reshape(-1)
+    got = np.asarray(neighbors.reverse_edge_values(
+        jnp.asarray(knn_idx), jnp.asarray(vals_nk), jnp.asarray(rows),
+        jnp.asarray(cols), jnp.asarray(vals_nk.reshape(-1)), n))
+    # reverse of (i → i+1) is slot 1 of row i+1; of (i → i−1), slot 0 of i−1
+    expected = np.stack([2.0 * ((i + 1) % n) + 1.0,
+                         2.0 * ((i - 1) % n)], 1).reshape(-1)
+    np.testing.assert_array_equal(got, expected.astype(np.float32))

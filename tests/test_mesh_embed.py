@@ -165,6 +165,33 @@ def mesh8():
     return mesh_mod.make_embed_mesh(8)
 
 
+# ------------------------------------------------ host-side: kNN edge cases
+def test_knn_graph_block_not_dividing_n_matches_dense():
+    """Blocked exact path at a block that does NOT divide N (203 = 5·37
+    + 18): padded tail rows must not leak into anyone's neighbor list."""
+    from repro.core import neighbors
+    x, _ = _blob_data()
+    i1, d1 = neighbors.knn_graph(x, 10)
+    i2, d2 = neighbors.knn_graph(x, 10, block=37)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["exact", "ann"])
+def test_knn_graph_clamps_k_to_n_minus_1(method):
+    """k ≥ N−1 clamps to N−1 on every path (a point has at most N−1
+    neighbors), and with k = N−1 both engines return the full sorted
+    neighbor set — so they must agree exactly."""
+    from repro.core import neighbors
+    x, _ = _blob_data(n=9)
+    idx, dist = neighbors.knn_graph(x, 50, method=method)
+    assert idx.shape == (9, 8) and dist.shape == (9, 8)
+    own = np.arange(9)[:, None]
+    assert not (np.asarray(idx) == own).any()        # never lists itself
+    ei, _ = neighbors.knn_graph(x, 8)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ei))
+
+
 # ----------------------------------------------------- 8-device: kNN + grad
 @needs8
 def test_knn_graph_mesh_matches_single_device(mesh8):
@@ -174,6 +201,21 @@ def test_knn_graph_mesh_matches_single_device(mesh8):
     i2, d2 = neighbors.knn_graph(x, 10, block=64, mesh=mesh8)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+
+
+@needs8
+def test_ann_knn_graph_mesh_matches_single_device(mesh8):
+    """The approximate engine under shard_map at a non-power-of-two N is
+    BIT-exact vs single-device: replicated probe merges, per-global-row
+    RNG draws, and a psum'd change count make the sharded NN-descent take
+    the identical trajectory (a layout/draw misalignment would diverge in
+    round 1)."""
+    from repro.core import neighbors
+    x, _ = _blob_data()
+    i1, d1 = neighbors.knn_graph(x, 10, method="ann")
+    i2, d2 = neighbors.knn_graph(x, 10, method="ann", mesh=mesh8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
 
 
 @needs8
