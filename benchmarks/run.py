@@ -19,6 +19,9 @@ Emits CSV blocks (name, value, paper reference) for:
                            (one subprocess per D, virtual CPU devices)
   * knn_recall           — approximate (sketch bucketing + NN-descent) vs
                            exact kNN build: recall + wall-clock
+  * service              — online service: ingest absorption points/sec,
+                           warm vs cold refresh iterations-to-target,
+                           out-of-sample transform queries/sec
 
 Every bench is registered by module name and imported via importlib at
 dispatch time — a registered module that fails to import aborts the run
@@ -97,6 +100,9 @@ def build_jobs(fast: bool):
             json_out=None if fast else m.DEFAULT_JSON)),
         ("knn_recall", "bench_knn_recall", lambda m: (
             m.run_smoke(json_out="BENCH_knn_recall_ci.json") if fast
+            else m.run(json_out=m.DEFAULT_JSON))),
+        ("service", "bench_service", lambda m: (
+            m.run_smoke(json_out="BENCH_service_ci.json") if fast
             else m.run(json_out=m.DEFAULT_JSON))),
     ]
 

@@ -6,6 +6,14 @@ Runs the paper's full Fig.-1 pipeline on one host: quantize → Count
 Sketch → heavy hitters → weighted jittered representatives → UMAP (or
 tSNE) → cluster summary.  Prints coverage and HH statistics, and writes
 the 2-D embedding to /tmp/sns_embedding.csv.
+
+This is the one-shot front-end.  For data that keeps arriving, the
+long-lived service API (`core.service.SnsService`) wraps the same
+stages behind `update(chunks)` (incremental ingest), `refresh()`
+(warm-start re-embed from the previous coordinates), and
+`transform(queries)` (batched out-of-sample placement, no optimizer) —
+see examples/sns_service.py.  (examples/serve.py and launch/serve.py
+are the LM-stack servers, unrelated to the SnS pipeline.)
 """
 import argparse
 import sys

@@ -7,6 +7,11 @@ Uses the smoke-size variant of any assigned arch (the full configs need a
 pod).  Demonstrates the serve_step path the decode_32k / long_500k
 dry-run cells lower: prefill -> argmax decode loop against the cache
 (incl. SSM-state decode for mamba/jamba).
+
+NOTE: this (and launch/serve.py) serves the LM stack.  The Sketch-and-
+Scale serving counterpart — incremental ingest + warm re-embed +
+out-of-sample transform() — is examples/sns_service.py on top of
+core.service.SnsService.
 """
 import argparse
 import sys

@@ -144,13 +144,20 @@ def _cell_keys(xr: jnp.ndarray, bits: int, key_dims: int) -> jnp.ndarray:
 
 
 def _probe_layout(x: jnp.ndarray, k: int, key: jnp.ndarray, cfg: AnnConfig,
-                  chunk_tiles: int):
+                  chunk_tiles: int, cand_ids: Optional[jnp.ndarray] = None):
     """One probe's sorted tile layout: rotate → cell keys → key-sort →
     fixed B-row query tiles with 3B halo candidate windows.
 
     Returns (qx (T,B,D), qid (T,B), cx (T,3B,D), cid (T,3B), inv) where T
     is padded to a multiple of ``chunk_tiles`` (junk tiles carry id −1)
     and ``inv`` maps original row i to its sorted position.
+
+    ``cand_ids`` (optional, (N,) int32) decouples the *candidate* id a
+    row exposes from the row's own query id: rows carrying −1 can still
+    probe (they sort into the layout and get scored) but are never
+    returned as neighbors — the asymmetric query-vs-corpus mode
+    (:func:`ann_knn_query` appends query rows with cand id −1).  The
+    default (None) keeps the symmetric self-join: cand id = row id.
     """
     n, d = x.shape
     b = _bucket_size(cfg, k)
@@ -166,17 +173,23 @@ def _probe_layout(x: jnp.ndarray, k: int, key: jnp.ndarray, cfg: AnnConfig,
     order = jnp.argsort(keys_p, stable=True)                 # (n_sort,)
     ids = jnp.where(jnp.arange(n_sort) < n,
                     jnp.arange(n_sort), -1).astype(jnp.int32)
+    cids = ids if cand_ids is None else \
+        jnp.pad(cand_ids.astype(jnp.int32), (0, n_sort - n),
+                constant_values=-1)
     sx = jnp.pad(x, ((0, n_sort - n), (0, 0)))[order]
     sid = ids[order]
+    scid = cids[order]
     # extend to the chunk-padded tile count, then halo-pad a tile per side
     sx = jnp.pad(sx, ((b, n_lay - n_sort + b), (0, 0)))
     sid = jnp.pad(sid, ((b, n_lay - n_sort + b),), constant_values=-1)
+    scid = jnp.pad(scid, ((b, n_lay - n_sort + b),), constant_values=-1)
     qx = sx[b:b + n_lay].reshape(nbp, b, d)
     qid = sid[b:b + n_lay].reshape(nbp, b)
     cx = jnp.concatenate([sx[:n_lay].reshape(nbp, b, d), qx,
                           sx[2 * b:].reshape(nbp, b, d)], axis=1)
-    cid = jnp.concatenate([sid[:n_lay].reshape(nbp, b), qid,
-                           sid[2 * b:].reshape(nbp, b)], axis=1)
+    cid = jnp.concatenate([scid[:n_lay].reshape(nbp, b),
+                           scid[b:b + n_lay].reshape(nbp, b),
+                           scid[2 * b:].reshape(nbp, b)], axis=1)
     inv = jnp.argsort(order, stable=True)
     return qx, qid, cx, cid, inv
 
@@ -467,4 +480,73 @@ def ann_knn_graph(x: jnp.ndarray, k: int, cfg: Optional[AnnConfig] = None,
         idx, d2 = _ann_build(x, k, cfg)
     else:
         idx, d2 = _ann_build_mesh(x, k, cfg, mesh)
+    return idx, jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+# ----------------------------------------------------- query-vs-corpus mode
+# Asymmetric kNN: k nearest *corpus* rows for each query row, corpus
+# frozen — the out-of-sample `transform()` regime (ROADMAP item 3).  The
+# same two machines run unmodified: stage 1 sorts the UNION [corpus;
+# queries] per probe, with the candidate-id channel carrying the corpus
+# index for corpus rows and −1 for query rows (a query can probe but
+# never be returned), and query rows keyed n+j so the distance tile's
+# self-mask (cid == qid) never fires — an identical query keeps its
+# corpus twin at distance 0.  An optional expansion round walks the
+# corpus's own kNN graph from the probe candidates (one gather + exact
+# rescore), the query-side half of an NN-descent iteration.
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "expand_k"))
+def _ann_query(q: jnp.ndarray, x: jnp.ndarray, corpus_idx, k: int,
+               cfg: AnnConfig, expand_k: int):
+    n, d = x.shape
+    m = q.shape[0]
+    allx = jnp.concatenate([x.astype(jnp.float32),
+                            q.astype(jnp.float32)], axis=0)
+    cand_ids = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
+                                jnp.full((m,), -1, jnp.int32)])
+    kp = jax.random.PRNGKey(cfg.seed)
+    probes = []
+    for p in range(cfg.probes):
+        lay = _probe_layout(allx, k, jax.random.fold_in(kp, p), cfg,
+                            _TILE_CHUNK, cand_ids=cand_ids)
+        ti, td = _tiles_topk(*lay[:4], k, cfg, _TILE_CHUNK)
+        qpos = lay[4][n:n + m]             # sorted positions of query rows
+        probes.append((ti[qpos], td[qpos]))
+    idx, d2 = _merge_probes(probes, k)
+    if corpus_idx is not None and expand_k > 0:
+        # expansion: candidates' own neighbor lists, scored exactly —
+        # peak buffer O(m · k·expand_k · D), never (m, n)
+        kc = corpus_idx.shape[1]
+        ecols = min(expand_k, kc)
+        lists = corpus_idx[jnp.clip(idx, 0, n - 1), :ecols]  # (m, k, ecols)
+        cand = jnp.where((idx >= 0)[:, :, None], lists, -1)
+        cand = cand.reshape(m, k * ecols)
+        xc = allx[jnp.clip(cand, 0, n - 1)]                  # (m, k·e, D)
+        d2n = jnp.sum((q.astype(jnp.float32)[:, None, :] - xc) ** 2, axis=2)
+        d2n = jnp.where(cand < 0, jnp.inf, d2n)
+        idx, d2 = _dedupe_topk(jnp.concatenate([idx, cand], axis=1),
+                               jnp.concatenate([d2, d2n], axis=1), k)
+    return idx, d2
+
+
+def ann_knn_query(q: jnp.ndarray, x: jnp.ndarray, k: int,
+                  cfg: Optional[AnnConfig] = None, *,
+                  corpus_graph: Optional[jnp.ndarray] = None,
+                  expand_k: int = 16
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximate kNN of ``q`` (Q, D) against the frozen corpus ``x``
+    (N, D): returns (indices (Q, k) into x, euclidean dists (Q, k)
+    ascending).  No self-exclusion — a query identical to a corpus row
+    returns that row at distance 0.
+
+    ``corpus_graph`` (optional (N, kc) int neighbor lists, e.g. from
+    :func:`ann_knn_graph`) enables one expansion round: each probe
+    candidate contributes its ``expand_k`` nearest corpus neighbors,
+    rescored exactly — the standard recall lift when the bucketing probes
+    land near but not on the true neighbors."""
+    cfg = cfg if cfg is not None else AnnConfig()
+    n = x.shape[0]
+    k = min(int(k), max(n, 1))
+    idx, d2 = _ann_query(q, x, corpus_graph, k, cfg,
+                         0 if corpus_graph is None else int(expand_k))
     return idx, jnp.sqrt(jnp.maximum(d2, 0.0))

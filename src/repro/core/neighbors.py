@@ -132,6 +132,36 @@ def knn_graph(x: jnp.ndarray, k: int, *, block: Optional[int] = None,
     return idx[:n], dist[:n]
 
 
+def knn_query(q: jnp.ndarray, x: jnp.ndarray, k: int, *,
+              block: Optional[int] = None, method: str = "exact",
+              ann=None, corpus_graph: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Asymmetric kNN: k nearest rows of the frozen corpus ``x`` (N, D)
+    for each query in ``q`` (Q, D) — the out-of-sample ``transform()``
+    regime.  Returns (indices (Q, k) into x, euclidean dists (Q, k)).
+
+    Unlike :func:`knn_graph` there is NO self-exclusion: a query identical
+    to a corpus row returns that row at distance 0, so ``k`` clamps to N
+    (not N−1).  ``method``/``ann`` mirror :func:`knn_graph`; the exact
+    path streams ``block``-query chunks through the same row machinery
+    (peak O(block · N)).  ``corpus_graph`` (optional corpus kNN indices)
+    feeds the ann path's expansion round for a recall lift.
+    """
+    n = x.shape[0]
+    k = min(int(k), max(n, 1))
+    if method not in ("exact", "auto", "ann"):
+        raise ValueError(f"unknown kNN method: {method!r}")
+    if method != "exact":
+        from repro.core import ann as ann_mod  # lazy: avoid import cycle
+        cfg = ann if ann is not None else ann_mod.AnnConfig()
+        if method == "ann" or n > cfg.auto_threshold:
+            return ann_mod.ann_knn_query(q, x, k, cfg,
+                                         corpus_graph=corpus_graph)
+    # query ids of -1 never equal a column id >= 0 -> no exclusion
+    qids = jnp.full((q.shape[0],), -1, jnp.int32)
+    return _knn_rows(q, qids, x, k, block)
+
+
 def reverse_edge_values(knn_idx: jnp.ndarray, vals_nk: jnp.ndarray,
                         rows: jnp.ndarray, cols: jnp.ndarray,
                         vals: jnp.ndarray, n: int) -> jnp.ndarray:

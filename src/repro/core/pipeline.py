@@ -24,6 +24,7 @@ hitters — tests/test_stream_ingest.py property-tests the contract.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Iterable, Optional, Tuple
 
 import jax
@@ -36,6 +37,7 @@ from repro.core import mesh as mesh_mod
 from repro.core import sketch as sketch_mod
 from repro.core import stream as stream_mod
 from repro.core import tsne as tsne_mod
+from repro.core import u64
 from repro.core import umap as umap_mod
 from repro.core.heavy_hitters import HeavyHitters
 from repro.core.quantize import GridSpec
@@ -207,6 +209,57 @@ def _ingest_stream(cfg: SnsConfig, chunks, grid: Optional[GridSpec]
     return grid, state
 
 
+def resolve_embed_cfg(cfg: SnsConfig, tsne_cfg=None, umap_cfg=None):
+    """Embedder config with SnsConfig's backend/block/kNN knobs applied.
+
+    SnsConfig is authoritative for the embedding backend/block — the
+    tsne/umap cfgs carry algorithm hyper-parameters only."""
+    if cfg.embedder == "tsne":
+        tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
+        return dataclasses.replace(tc, backend=cfg.embed_backend,
+                                   block=cfg.embed_block, knn=cfg.embed_knn,
+                                   grid_size=cfg.embed_grid,
+                                   grid_interval=cfg.embed_grid_interval,
+                                   grid_max=cfg.embed_grid_max,
+                                   cic=cfg.embed_cic,
+                                   knn_method=cfg.embed_knn_method,
+                                   ann=cfg.embed_ann)
+    if cfg.embedder == "umap":
+        # embed_block bounds the kNN row-block on the UMAP side too
+        # (tests/test_umap_scatter_free.py pins the propagation)
+        uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
+        return dataclasses.replace(uc, block=cfg.embed_block,
+                                   knn_method=cfg.embed_knn_method,
+                                   ann=cfg.embed_ann)
+    raise ValueError(f"unknown embedder {cfg.embedder!r}")
+
+
+def embed_points(cfg: SnsConfig, key, x: jnp.ndarray, weights: jnp.ndarray,
+                 ecfg=None, *, init: Optional[jnp.ndarray] = None,
+                 tsne_cfg=None, umap_cfg=None
+                 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Run the configured embedder on already-built representatives.
+
+    Returns ``(embedding, kl_trace)`` — the trace is the tSNE per-iteration
+    KL history, or None for UMAP.  ``init`` (optional (N, dims)) warm-starts
+    the optimizer; ``ecfg`` short-circuits :func:`resolve_embed_cfg` for
+    callers that pre-resolved the embedder config (the service keeps one
+    resolved cold config and a warm variant)."""
+    embed_mesh = mesh_mod.resolve_mesh(cfg.embed_mesh)
+    if ecfg is None:
+        ecfg = resolve_embed_cfg(cfg, tsne_cfg=tsne_cfg, umap_cfg=umap_cfg)
+    # only forward init= when set: run_tsne/run_umap stand-ins predating
+    # the warm-start hook stay call-compatible
+    kw = {} if init is None else {"init": init}
+    if cfg.embedder == "tsne":
+        emb, kl = tsne_mod.run_tsne(key, x, ecfg, weights=weights,
+                                    mesh=embed_mesh, **kw)
+        return emb, kl
+    emb = umap_mod.run_umap(key, x, ecfg, weights=weights, mesh=embed_mesh,
+                            **kw)
+    return emb, None
+
+
 def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
                 tsne_cfg: Optional[tsne_mod.TsneConfig] = None,
                 umap_cfg: Optional[umap_mod.UmapConfig] = None,
@@ -217,39 +270,14 @@ def embed_stage(cfg: SnsConfig, grid: GridSpec, hh: HeavyHitters,
     ``shard_map`` (see ``core.mesh``); results stay fp-equivalent to the
     single-device path, and UMAP's negative-sample draws stay
     draw-for-draw aligned (tests/test_mesh_embed.py)."""
-    embed_mesh = mesh_mod.resolve_mesh(cfg.embed_mesh)
     key = jax.random.key(cfg.seed + 1)
     krep, kembed = jax.random.split(key)
     reps = replicas.make_representatives(
         krep, grid, hh, scheme=cfg.replica_scheme,
         max_replicas=cfg.max_replicas, jitter_frac=cfg.jitter_frac)
     pts, w, ids = replicas.compact(reps)
-    x = jnp.asarray(pts)
-    wj = jnp.asarray(w)
-    # SnsConfig is authoritative for the embedding backend/block — the
-    # tsne/umap cfgs carry algorithm hyper-parameters only.
-    if cfg.embedder == "tsne":
-        tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
-        tc = dataclasses.replace(tc, backend=cfg.embed_backend,
-                                 block=cfg.embed_block, knn=cfg.embed_knn,
-                                 grid_size=cfg.embed_grid,
-                                 grid_interval=cfg.embed_grid_interval,
-                                 grid_max=cfg.embed_grid_max,
-                                 cic=cfg.embed_cic,
-                                 knn_method=cfg.embed_knn_method,
-                                 ann=cfg.embed_ann)
-        emb, _ = tsne_mod.run_tsne(kembed, x, tc, weights=wj,
-                                   mesh=embed_mesh)
-    elif cfg.embedder == "umap":
-        # embed_block bounds the kNN row-block on the UMAP side too
-        # (tests/test_umap_scatter_free.py pins the propagation)
-        uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
-        uc = dataclasses.replace(uc, block=cfg.embed_block,
-                                 knn_method=cfg.embed_knn_method,
-                                 ann=cfg.embed_ann)
-        emb = umap_mod.run_umap(kembed, x, uc, weights=wj, mesh=embed_mesh)
-    else:
-        raise ValueError(f"unknown embedder {cfg.embedder!r}")
+    emb, _ = embed_points(cfg, kembed, jnp.asarray(pts), jnp.asarray(w),
+                          tsne_cfg=tsne_cfg, umap_cfg=umap_cfg)
     return reps, emb, w, ids
 
 
@@ -380,14 +408,37 @@ def chunks_from_loader(plan, host: int,
     return factory
 
 
+@functools.partial(jax.jit, static_argnames=("grid", "chunk"))
+def _assign_chunks(pts: jnp.ndarray, shi: jnp.ndarray, slo: jnp.ndarray,
+                   sids: jnp.ndarray, grid: GridSpec, chunk: int
+                   ) -> jnp.ndarray:
+    """Quantize + binary-search ``pts`` (padded to a chunk multiple)
+    against the sorted HH key table, one ``lax.map`` chunk at a time —
+    peak memory O(chunk), one compile per (grid, chunk, shapes)."""
+    nk = shi.shape[0]
+
+    def one(p):
+        khi, klo = quantize.points_to_keys(grid, p)
+        pos = u64.searchsorted((shi, slo), (khi, klo))
+        pos_c = jnp.minimum(pos, nk - 1)
+        hit = (shi[pos_c] == khi) & (slo[pos_c] == klo)
+        return jnp.where(hit, sids[pos_c], -1)
+
+    nb = pts.shape[0] // chunk
+    return jax.lax.map(one, pts.reshape(nb, chunk, -1)).reshape(-1)
+
+
 def assign_points_to_hh(grid: GridSpec, hh: HeavyHitters,
                         points: jnp.ndarray, chunk: int = 65536
                         ) -> np.ndarray:
     """Label raw points by nearest HH cell key (-1 if not an HH cell).
 
     Used to project HH-level cluster labels back to the raw data, as the
-    paper does for the contingency table (§IV-1).  Chunked exact match on
-    packed keys."""
+    paper does for the contingency table (§IV-1), and by the service's
+    drift accounting.  The whole per-chunk body (quantize + two-limb
+    binary search, :func:`repro.core.u64.searchsorted`) is one jitted
+    ``lax.map`` — no per-chunk host round-trip, so large query batches
+    stream at device speed."""
     n = points.shape[0]
     hh_hi = np.asarray(hh.key_hi, np.uint64)
     hh_lo = np.asarray(hh.key_lo, np.uint64)
@@ -396,16 +447,16 @@ def assign_points_to_hh(grid: GridSpec, hh: HeavyHitters,
     order = np.argsort(packed[live], kind="stable")
     sorted_keys = packed[live][order]
     sorted_ids = np.flatnonzero(live)[order]
-    out = np.full((n,), -1, np.int64)
-    if sorted_keys.size == 0:
-        return out
-    for s in range(0, n, chunk):
-        pts = jnp.asarray(points[s:s + chunk])
-        khi, klo = quantize.points_to_keys(grid, pts)
-        keys = (np.asarray(khi, np.uint64) << np.uint64(32)) | \
-            np.asarray(klo, np.uint64)
-        pos = np.minimum(np.searchsorted(sorted_keys, keys),
-                         sorted_keys.size - 1)
-        hit = sorted_keys[pos] == keys
-        out[s:s + chunk] = np.where(hit, sorted_ids[pos], -1)
-    return out
+    if sorted_keys.size == 0 or n == 0:
+        return np.full((n,), -1, np.int64)
+    shi = jnp.asarray((sorted_keys >> np.uint64(32)).astype(np.uint32))
+    slo = jnp.asarray(sorted_keys.astype(np.uint32))
+    sids = jnp.asarray(sorted_ids.astype(np.int32))
+    chunk = max(1, min(int(chunk), n))
+    pts = np.asarray(points, np.float32)
+    pad = (-n) % chunk
+    if pad:
+        pts = np.concatenate([pts, np.zeros((pad, pts.shape[1]),
+                                            np.float32)])
+    out = _assign_chunks(jnp.asarray(pts), shi, slo, sids, grid, chunk)
+    return np.asarray(out[:n]).astype(np.int64)

@@ -67,8 +67,19 @@ def make_representatives(key: jax.Array, grid: GridSpec, hh: HeavyHitters,
     n = replica_counts(hh, scheme, max_replicas)              # (K,)
 
     cell = jnp.asarray(grid.cell_size)                        # (D,)
-    jit = jax.random.uniform(key, (k, max_replicas, grid.dims),
-                             minval=-jitter_frac, maxval=jitter_frac)
+
+    # The jitter is a pure function of (cell key, slot, seed) — NOT of
+    # the row index.  HH rows are sorted by count, so a position-indexed
+    # draw re-rolls every cell's jitter whenever the ranking reshuffles
+    # (e.g. between two extractions of a drifting stream); cell-keyed
+    # draws keep each cell's representatives put, which is what lets a
+    # warm-started re-embed seed matched reps at their old coordinates.
+    def _cell_jitter(hi, lo):
+        kc = jax.random.fold_in(jax.random.fold_in(key, hi), lo)
+        return jax.random.uniform(kc, (max_replicas, grid.dims),
+                                  minval=-jitter_frac, maxval=jitter_frac)
+
+    jit = jax.vmap(_cell_jitter)(hh.key_hi, hh.key_lo)        # (K, max, D)
     pts = centers[:, None, :] + jit * cell[None, None, :]     # (K, max, D)
     slot = jnp.arange(max_replicas)[None, :]                  # (1, max)
     live = slot < n[:, None]                                  # (K, max)

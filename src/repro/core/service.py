@@ -1,0 +1,347 @@
+"""Online SnS service: the pipeline as a long-lived serving system.
+
+ROADMAP item 3's gap between a reproduction and a production service:
+the paper's premise is data that never stops arriving at edge nodes, yet
+``pipeline.run`` recomputes everything from a cold start.  The sketch is
+linear and the reservoir resumable (PR 2/3), so an :class:`SnsService`
+keeps one live :class:`~repro.core.stream.IngestState` and serves three
+operations, each a distinct perf lever:
+
+* :meth:`SnsService.update` — fold new chunks into the live fold via the
+  fused ``ingest_superbatch`` path.  No re-read of history: absorbing a
+  chunk costs the same whether the service has seen 10⁴ or 10⁹ points.
+  Heavy hitters are NOT re-extracted here; :meth:`SnsService.needs_refresh`
+  watches drift (fraction of mass ingested since the last refresh) and
+  the space-saving error watermark against the smallest served HH count.
+
+* :meth:`SnsService.refresh` — re-extract HH → representatives → embed.
+  Returning representatives are matched to the previous embedding by
+  (quantized cell key, replica slot) and seeded at their old coordinates;
+  new cells are placed by inverse-distance-weighted kNN interpolation
+  over the matched ones; the optimizer then runs from that init (the
+  ``init=`` hooks on ``run_tsne``/``run_umap``) with early exaggeration
+  skipped and ~10× fewer iterations than cold start.
+
+* :meth:`SnsService.transform` — batched out-of-sample embedding of raw
+  query points with NO optimizer: asymmetric kNN of queries against the
+  frozen representative set (:func:`repro.core.neighbors.knn_query`),
+  then barycentric placement under inverse-square-distance attraction
+  weights — one jitted ``lax.map`` over fixed-size chunks, so peak memory
+  is O(chunk · N_reps), never (Q, N_reps), and high query traffic serves
+  at batched-millisecond latency.
+
+The grid is fixed at construction (the paper's shared-hypercube
+contract): cell keys — the identity that the warm-start matching relies
+on — are only comparable across refreshes under one grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heavy_hitters as hh_mod
+from repro.core import neighbors, pipeline, replicas
+from repro.core import stream as stream_mod
+from repro.core.pipeline import SnsConfig
+from repro.core.quantize import GridSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving-side knobs (the pipeline knobs stay on ``SnsConfig``)."""
+    # refresh policy: refresh when the mass ingested since the last
+    # refresh exceeds this fraction of the total stream...
+    refresh_drift: float = 0.1
+    # ...or when the space-saving eviction watermark (the largest count
+    # the candidate stage may have withheld) reaches this fraction of the
+    # smallest HH count currently being served — past that, the served
+    # top-K set itself is in doubt
+    error_ratio: float = 0.5
+    # warm refresh iteration budget; 0 → cold budget // warm_factor
+    warm_iters: int = 0
+    warm_factor: int = 10
+    # transform(): kNN fan-out, chunk rows per jitted map step, and the
+    # attraction weight floor w = 1/(d² + eps) — eps small enough that an
+    # identity query (d = 0) collapses onto its representative
+    transform_k: int = 8
+    transform_chunk: int = 4096
+    transform_eps: float = 1e-12
+
+
+@dataclasses.dataclass
+class EmbedCache:
+    """The frozen serving snapshot produced by the last refresh()."""
+    rep_cell: np.ndarray      # (live,) uint64 packed quantized cell key
+    rep_slot: np.ndarray      # (live,) int32 replica slot within the cell
+    rep_x: jnp.ndarray        # (live, D) representative data coords
+    rep_y: jnp.ndarray        # (live, dims) embedded coords
+    rep_w: np.ndarray         # (live,) weights (HH counts)
+    rep_ids: np.ndarray       # (live,) HH index of each rep
+    min_hh_count: float       # smallest served HH count (error_ratio gate)
+
+
+@dataclasses.dataclass
+class RefreshResult:
+    embedding: jnp.ndarray    # (live, dims)
+    weights: np.ndarray       # (live,)
+    hh_ids: np.ndarray        # (live,)
+    warm: bool                # did this refresh run from a warm init?
+    n_matched: int            # reps seeded at their previous coordinates
+    n_new: int                # reps placed by kNN interpolation
+    n_iters: int              # optimizer iterations this refresh ran
+    kl_trace: Optional[jnp.ndarray]  # tSNE per-iteration KL (None: UMAP)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "eps"))
+def _transform_chunks(q: jnp.ndarray, rep_x: jnp.ndarray,
+                      rep_y: jnp.ndarray, k: int, chunk: int, eps: float
+                      ) -> jnp.ndarray:
+    """Barycentric out-of-sample placement, one chunk at a time.
+
+    ``lax.map`` over (nb, chunk, D) keeps the distance buffer at
+    (chunk, N_reps) — the jaxpr never allocates (Q, N_reps)
+    (tests/test_service.py pins this on the traced avals)."""
+    def one(qc):
+        idx, dist = neighbors.knn_query(qc, rep_x, k)
+        w = 1.0 / (dist * dist + eps)
+        w = w / jnp.sum(w, axis=1, keepdims=True)
+        return jnp.einsum("qk,qkd->qd", w, rep_y[idx])
+
+    nb = q.shape[0] // chunk
+    out = jax.lax.map(one, q.reshape(nb, chunk, -1))
+    return out.reshape(-1, rep_y.shape[1])
+
+
+def _packed_cells(hh: hh_mod.HeavyHitters, ids: np.ndarray) -> np.ndarray:
+    """uint64 packed cell key of each live rep (by its HH index)."""
+    hi = np.asarray(hh.key_hi, np.uint64)[ids]
+    lo = np.asarray(hh.key_lo, np.uint64)[ids]
+    return (hi << np.uint64(32)) | lo
+
+
+class SnsService:
+    """Long-lived SnS pipeline: incremental ingest, warm re-embed,
+    batched out-of-sample transform.  See the module docstring for the
+    serving model; ``examples/sns_service.py`` walks the full loop."""
+
+    def __init__(self, cfg: SnsConfig, grid: GridSpec, *,
+                 tsne_cfg=None, umap_cfg=None,
+                 service_cfg: Optional[ServiceConfig] = None):
+        self.cfg = cfg
+        self.grid = grid
+        self.scfg = service_cfg or ServiceConfig()
+        self._ecfg = pipeline.resolve_embed_cfg(cfg, tsne_cfg=tsne_cfg,
+                                                umap_cfg=umap_cfg)
+        pool = cfg.candidate_pool or 2 * cfg.top_k
+        self.state = stream_mod.init(jax.random.key(cfg.seed), cfg.rows,
+                                     cfg.log2_cols, pool)
+        self._cache: Optional[EmbedCache] = None
+        self._pending = 0.0   # mass ingested since the last refresh
+
+    # ------------------------------------------------------------ ingest
+    def update(self, chunks) -> Dict[str, float]:
+        """Fold new data into the live ingest state (no history re-read).
+
+        ``chunks``: a single (n, D) array, an iterable of them, or a
+        zero-arg callable factory.  Returns absorption stats — points
+        folded, wall seconds (device-synced), points/sec — plus the
+        current drift picture (``pending_fraction``, ``needs_refresh``).
+        """
+        if pipeline._is_points_array(chunks):
+            chunks = [chunks]
+        before = float(self.state.count)     # syncs any in-flight fold
+        t0 = time.perf_counter()
+        self.state = stream_mod.ingest_all(
+            self.state, self.grid, pipeline._chunk_stream(chunks),
+            self.cfg.ingest_chunk, superbatch=self.cfg.ingest_superbatch)
+        absorbed = float(self.state.count) - before   # blocks on the fold
+        dt = time.perf_counter() - t0
+        self._pending += absorbed
+        return {"points": absorbed, "seconds": dt,
+                "points_per_sec": absorbed / dt if dt > 0 else 0.0,
+                "pending_fraction": self.pending_fraction(),
+                "needs_refresh": self.needs_refresh()}
+
+    def pending_fraction(self) -> float:
+        """Fraction of all ingested mass not yet reflected in the served
+        embedding (1.0 before the first refresh)."""
+        total = float(self.state.count)
+        return self._pending / total if total > 0 else 0.0
+
+    def needs_refresh(self) -> bool:
+        """Drift / error-bound refresh policy (see ServiceConfig)."""
+        if self._cache is None:
+            return True
+        if self.pending_fraction() >= self.scfg.refresh_drift:
+            return True
+        bound = float(stream_mod.space_saving_bound(self.state))
+        return bound >= self.scfg.error_ratio * self._cache.min_hh_count
+
+    # ----------------------------------------------------------- refresh
+    def refresh(self, mode: str = "auto") -> RefreshResult:
+        """Re-extract heavy hitters and re-embed, warm-starting from the
+        previous embedding when possible.
+
+        ``mode``: ``"auto"`` (warm iff a previous embedding exists and
+        any representative matches), ``"cold"`` (force a from-scratch
+        embed), ``"warm"`` (fail loudly if there is nothing to warm from).
+        """
+        if mode not in ("auto", "cold", "warm"):
+            raise ValueError(f"unknown refresh mode: {mode!r}")
+        if mode == "warm" and self._cache is None:
+            raise ValueError("warm refresh requested but no previous "
+                             "embedding exists; run refresh() first")
+        cfg = self.cfg
+        hh = hh_mod.from_candidates(self.state.sketch, self.state.cands,
+                                    cfg.top_k)
+        # same key discipline as pipeline.embed_stage: reps and optimizer
+        # draws are bit-reproducible for a given (seed, HH set)
+        krep, kembed = jax.random.split(jax.random.key(cfg.seed + 1))
+        reps = replicas.make_representatives(
+            krep, self.grid, hh, scheme=cfg.replica_scheme,
+            max_replicas=cfg.max_replicas, jitter_frac=cfg.jitter_frac)
+        pts, w, ids = replicas.compact(reps)
+        cells = _packed_cells(hh, ids)
+        slots = (np.flatnonzero(np.asarray(reps.mask))
+                 % cfg.max_replicas).astype(np.int32)
+
+        init, n_matched, n_new = None, 0, 0
+        if mode != "cold" and self._cache is not None:
+            init, n_matched, n_new = self._warm_init(pts, cells, slots)
+        warm = init is not None
+        ecfg, n_iters = self._refresh_ecfg(warm)
+
+        x, wj = jnp.asarray(pts), jnp.asarray(w)
+        emb, trace = pipeline.embed_points(cfg, kembed, x, wj, ecfg,
+                                           init=init)
+        live_counts = np.asarray(hh.count)[np.asarray(hh.mask).astype(bool)]
+        self._cache = EmbedCache(
+            rep_cell=cells, rep_slot=slots, rep_x=x, rep_y=emb,
+            rep_w=w, rep_ids=ids,
+            min_hh_count=float(live_counts.min()) if live_counts.size
+            else 0.0)
+        self._pending = 0.0
+        return RefreshResult(embedding=emb, weights=w, hh_ids=ids,
+                             warm=warm, n_matched=n_matched, n_new=n_new,
+                             n_iters=n_iters, kl_trace=trace)
+
+    def _warm_init(self, pts, cells, slots):
+        """Seed coordinates for the new rep set from the cached embedding:
+        returning (cell, slot) identities keep their old position, new
+        ones interpolate over their kNN among the matched (inverse square
+        distance weights).  Returns (init | None, n_matched, n_new)."""
+        cache = self._cache
+        prev = {(int(c), int(s)): j for j, (c, s)
+                in enumerate(zip(cache.rep_cell, cache.rep_slot))}
+        at = np.array([prev.get((int(c), int(s)), -1)
+                       for c, s in zip(cells, slots)], np.int64)
+        matched = at >= 0
+        n_matched = int(matched.sum())
+        if n_matched == 0:
+            return None, 0, 0
+        old_y = np.asarray(cache.rep_y)
+        dims = old_y.shape[1]
+        y0 = np.zeros((pts.shape[0], dims), np.float32)
+        y0[matched] = old_y[at[matched]]
+        fresh = ~matched
+        n_new = int(fresh.sum())
+        if n_new:
+            k = min(self.scfg.transform_k, n_matched)
+            idx, dist = neighbors.knn_query(
+                jnp.asarray(pts[fresh]), jnp.asarray(pts[matched]), k)
+            dist = np.asarray(dist)
+            wk = 1.0 / (dist * dist + self.scfg.transform_eps)
+            wk /= wk.sum(axis=1, keepdims=True)
+            y0[fresh] = np.einsum("qk,qkd->qd", wk,
+                                  y0[matched][np.asarray(idx)])
+        return jnp.asarray(y0), n_matched, n_new
+
+    def _refresh_ecfg(self, warm: bool):
+        """Embedder config + iteration count for this refresh.  Warm runs
+        skip early exaggeration (the init is already globally arranged —
+        exaggeration would tear it apart) and cut iterations ~10×."""
+        ecfg = self._ecfg
+        if self.cfg.embedder == "tsne":
+            cold = ecfg.n_iter
+            if not warm:
+                return ecfg, cold
+            iters = self.scfg.warm_iters or \
+                max(1, cold // self.scfg.warm_factor)
+            return dataclasses.replace(
+                ecfg, n_iter=iters, exaggeration_iters=0,
+                momentum_switch=0), iters
+        cold = ecfg.n_epochs
+        if not warm:
+            return ecfg, cold
+        iters = self.scfg.warm_iters or \
+            max(1, cold // self.scfg.warm_factor)
+        return dataclasses.replace(ecfg, n_epochs=iters), iters
+
+    # --------------------------------------------------------- transform
+    def transform(self, queries) -> np.ndarray:
+        """Embed raw query points against the frozen served embedding —
+        no optimizer.  (Q, D) → (Q, dims); one jitted chunked pass, peak
+        memory O(transform_chunk · N_reps)."""
+        if self._cache is None:
+            raise ValueError("transform() needs a served embedding; call "
+                             "refresh() first")
+        q = np.asarray(queries, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None, :]
+        n = q.shape[0]
+        if n == 0:
+            return np.zeros((0, self._cache.rep_y.shape[1]), np.float32)
+        chunk = max(1, min(self.scfg.transform_chunk, n))
+        k = min(self.scfg.transform_k, int(self._cache.rep_x.shape[0]))
+        pad = (-n) % chunk
+        if pad:
+            q = np.concatenate(
+                [q, np.zeros((pad, q.shape[1]), np.float32)])
+        y = _transform_chunks(jnp.asarray(q), self._cache.rep_x,
+                              self._cache.rep_y, k, chunk,
+                              self.scfg.transform_eps)
+        out = np.asarray(y[:n])
+        return out[0] if squeeze else out
+
+    # ------------------------------------------------------- persistence
+    def save(self, path) -> None:
+        """Checkpoint the live fold AND the serving snapshot to one
+        ``.npz`` (via ``stream.save_state`` extras)."""
+        extra = {"pending": np.float64(self._pending)}
+        c = self._cache
+        if c is not None:
+            extra.update(
+                rep_cell=c.rep_cell, rep_slot=c.rep_slot,
+                rep_x=np.asarray(c.rep_x), rep_y=np.asarray(c.rep_y),
+                rep_w=c.rep_w, rep_ids=c.rep_ids,
+                min_hh_count=np.float64(c.min_hh_count))
+        stream_mod.save_state(self.state, path, extra=extra)
+
+    @classmethod
+    def load(cls, path, cfg: SnsConfig, grid: GridSpec, *,
+             tsne_cfg=None, umap_cfg=None,
+             service_cfg: Optional[ServiceConfig] = None) -> "SnsService":
+        """Resurrect a service from :meth:`save` — the fold continues and
+        the served embedding (if one was cached) serves immediately."""
+        svc = cls(cfg, grid, tsne_cfg=tsne_cfg, umap_cfg=umap_cfg,
+                  service_cfg=service_cfg)
+        state, extras = stream_mod.load_state(path, with_extra=True)
+        svc.state = state
+        svc._pending = float(extras.get("pending", 0.0))
+        if "rep_y" in extras:
+            svc._cache = EmbedCache(
+                rep_cell=extras["rep_cell"].astype(np.uint64),
+                rep_slot=extras["rep_slot"].astype(np.int32),
+                rep_x=jnp.asarray(extras["rep_x"]),
+                rep_y=jnp.asarray(extras["rep_y"]),
+                rep_w=extras["rep_w"],
+                rep_ids=extras["rep_ids"],
+                min_hh_count=float(extras["min_hh_count"]))
+        return svc

@@ -249,14 +249,17 @@ def _npz_path(path) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
-def save_state(state: IngestState, path) -> None:
+def save_state(state: IngestState, path, extra=None) -> None:
     """Checkpoint the ingest fold mid-stream to one ``.npz`` (resumable
     ingest; a missing ``.npz`` suffix is added).  Everything the fold
     carries — sketch table, hash params, reservoir, count, eviction
     watermark — round-trips exactly, so resuming reproduces bit-identical
-    heavy hitters."""
-    np.savez(
-        _npz_path(path),
+    heavy hitters.
+
+    ``extra`` (optional str → array mapping) rides along under
+    ``extra_``-prefixed keys — how the service persists its embed cache
+    next to the fold without a second file."""
+    payload = dict(
         table=np.asarray(state.sketch.table),
         hash_params=np.stack([np.asarray(p) for p in state.sketch.params]),
         cand_key_hi=np.asarray(state.cands.key_hi),
@@ -265,14 +268,22 @@ def save_state(state: IngestState, path) -> None:
         cand_mask=np.asarray(state.cands.mask),
         count=np.asarray(state.count),
         evict_max=np.asarray(state.evict_max))
+    for k, v in (extra or {}).items():
+        if not k or not isinstance(k, str):
+            raise ValueError(f"extra keys must be non-empty strings; "
+                             f"got {k!r}")
+        payload["extra_" + k] = np.asarray(v)
+    np.savez(_npz_path(path), **payload)
 
 
-def load_state(path) -> IngestState:
-    """Inverse of :func:`save_state`."""
+def load_state(path, with_extra: bool = False):
+    """Inverse of :func:`save_state`.  With ``with_extra=True`` returns
+    ``(state, extras)`` where extras maps the un-prefixed ``extra=`` keys
+    saved alongside (empty dict if none)."""
     with np.load(_npz_path(path)) as z:
         params = hashing.MulShiftParams(
             *(jnp.asarray(z["hash_params"][i]) for i in range(6)))
-        return IngestState(
+        state = IngestState(
             sketch=CountSketch(table=jnp.asarray(z["table"]), params=params),
             cands=Candidates(
                 key_hi=jnp.asarray(z["cand_key_hi"]),
@@ -281,3 +292,8 @@ def load_state(path) -> IngestState:
                 mask=jnp.asarray(z["cand_mask"])),
             count=jnp.asarray(z["count"]),
             evict_max=jnp.asarray(z["evict_max"]))
+        if not with_extra:
+            return state
+        extras = {k[len("extra_"):]: z[k] for k in z.files
+                  if k.startswith("extra_")}
+        return state, extras

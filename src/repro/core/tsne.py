@@ -135,6 +135,22 @@ class PointStats(NamedTuple):
     w: jnp.ndarray       # (N,) normalized point mass, Σ w = 1
 
 
+def validate_init(init, n: int, dims: int) -> Optional[jnp.ndarray]:
+    """Shape/dtype-check a warm-start embedding init (shared by both
+    embedders).  Accepts None (cold start) or an (N, dims) float array;
+    returns it as float32 or raises with the offending shape/dtype."""
+    if init is None:
+        return None
+    init = jnp.asarray(init)
+    if init.shape != (n, dims):
+        raise ValueError(
+            f"init must have shape ({n}, {dims}) to seed the embedding; "
+            f"got {init.shape}")
+    if not jnp.issubdtype(init.dtype, jnp.floating):
+        raise ValueError(f"init must be a float array; got {init.dtype}")
+    return init.astype(jnp.float32)
+
+
 def pairwise_sq_dists(x: jnp.ndarray, y: Optional[jnp.ndarray] = None
                       ) -> jnp.ndarray:
     """Squared Euclidean distances via the Gram-matrix identity (MXU-shaped)."""
@@ -705,7 +721,7 @@ def _sparse_stage_mesh(state: TsneState, kls: jnp.ndarray,
     return spmd(state, kls, ssp, it0)
 
 
-def _run_tsne_sparse_mesh(key: jax.Array, x: jnp.ndarray, weights, *,
+def _run_tsne_sparse_mesh(key: jax.Array, x: jnp.ndarray, weights, init, *,
                           cfg: TsneConfig, mesh, interpret: bool
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mesh-parallel sparse optimizer (fixed or span-adaptive G).
@@ -724,7 +740,8 @@ def _run_tsne_sparse_mesh(key: jax.Array, x: jnp.ndarray, weights, *,
     ssp = shard_sparse_p(sp, n, n_shards)
 
     # identical draws to the single-device path, then padded tail rows
-    y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
+    y0 = init if init is not None else \
+        1e-4 * jax.random.normal(key, (n, cfg.dims))
     y0 = jnp.pad(y0, [(0, n_pad - n), (0, 0)])
     state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
                       gains=jnp.ones_like(y0))
@@ -899,8 +916,8 @@ def _phase(i, cfg: TsneConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "backend", "interpret"))
-def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
-              backend: str, interpret: bool
+def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, init, *,
+              cfg: TsneConfig, backend: str, interpret: bool
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n = x.shape[0]
     if backend == "sparse":
@@ -927,7 +944,8 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
                 return embedding_grad(x, y, stats, exag, backend=backend,
                                       block=cfg.block, interpret=interpret)
 
-    y0 = 1e-4 * jax.random.normal(key, (n, cfg.dims))
+    y0 = init if init is not None else \
+        1e-4 * jax.random.normal(key, (n, cfg.dims))
     state = TsneState(y=y0, velocity=jnp.zeros_like(y0),
                       gains=jnp.ones_like(y0))
 
@@ -955,7 +973,7 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, *, cfg: TsneConfig,
 # run retraces at most log₂(grid_max/grid_size) times.
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _sparse_setup(key: jax.Array, x: jnp.ndarray, weights, *,
+def _sparse_setup(key: jax.Array, x: jnp.ndarray, weights, init, *,
                   cfg: TsneConfig) -> Tuple[SparseP, TsneState]:
     """One-time sparse-backend setup: COO P + optimizer init."""
     sp = build_sparse_p(x, cfg.perplexity, k=cfg.knn or None,
@@ -963,7 +981,8 @@ def _sparse_setup(key: jax.Array, x: jnp.ndarray, weights, *,
                         search_iters=cfg.sigma_search_iters,
                         block=cfg.block,
                         method=cfg.knn_method, ann=cfg.ann)
-    y0 = 1e-4 * jax.random.normal(key, (x.shape[0], cfg.dims))
+    y0 = init if init is not None else \
+        1e-4 * jax.random.normal(key, (x.shape[0], cfg.dims))
     return sp, TsneState(y=y0, velocity=jnp.zeros_like(y0),
                          gains=jnp.ones_like(y0))
 
@@ -999,11 +1018,11 @@ def _grid_for_span(span: float, g: int, cfg: TsneConfig) -> int:
     return g
 
 
-def _run_tsne_sparse_adaptive(key: jax.Array, x: jnp.ndarray, weights, *,
-                              cfg: TsneConfig, interpret: bool
+def _run_tsne_sparse_adaptive(key: jax.Array, x: jnp.ndarray, weights, init,
+                              *, cfg: TsneConfig, interpret: bool
                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Staged sparse optimizer with span-adaptive repulsion grid."""
-    sp, state = _sparse_setup(key, x, weights, cfg=cfg)
+    sp, state = _sparse_setup(key, x, weights, init, cfg=cfg)
     kls = jnp.zeros((cfg.n_iter,))
     g = cfg.grid_size
     it = 0
@@ -1022,7 +1041,8 @@ def _run_tsne_sparse_adaptive(key: jax.Array, x: jnp.ndarray, weights, *,
 def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
              weights: Optional[jnp.ndarray] = None,
              backend: Optional[str] = None,
-             mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             mesh=None, init: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full tSNE: returns (embedding (N, dims), KL trace (n_iter,)).
 
     ``backend`` overrides ``cfg.backend``; Pallas interpret mode is
@@ -1030,6 +1050,13 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
     ``Mesh``, see ``core.mesh``) runs the whole sparse optimizer
     row-block-sharded under ``shard_map`` — sparse backend only (the
     dense/tiled/pallas backends are O(N²) and stay single-device).
+
+    ``init`` seeds the optimizer at the given (N, dims) float coordinates
+    instead of the 1e-4·normal cold start — the warm-start hook the
+    online service uses to resume from a previous embedding (callers
+    normally pair it with ``exaggeration_iters=0``: early exaggeration
+    would blow a converged init apart).  Works on every backend and on
+    the mesh path; validated for shape/dtype up front.
     """
     backend = backend or cfg.backend
     if backend not in BACKENDS:
@@ -1039,16 +1066,25 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
             f"sparse backend splats onto a 2D grid; got dims={cfg.dims}")
     if cfg.cic not in CIC_PATHS:
         raise ValueError(f"unknown cic {cfg.cic!r}; want one of {CIC_PATHS}")
+    init = validate_init(init, x.shape[0], cfg.dims)
+    if cfg.n_iter == 0:
+        # degenerate but load-bearing for the warm-start contract: the
+        # returned embedding IS iteration 0 (the init, bit-exact), and no
+        # optimizer machinery may touch it (the fori_loop body would still
+        # trace a scatter into the empty KL trace)
+        y0 = init if init is not None else \
+            1e-4 * jax.random.normal(key, (x.shape[0], cfg.dims))
+        return y0, jnp.zeros((0,), jnp.float32)
     interpret = jax.default_backend() != "tpu"
     mesh = mesh_mod.resolve_mesh(mesh)
     if mesh is not None:
         if backend != "sparse":
             raise ValueError(
                 f"mesh-parallel tSNE needs backend='sparse'; got {backend!r}")
-        return _run_tsne_sparse_mesh(key, x, weights, cfg=cfg, mesh=mesh,
-                                     interpret=interpret)
+        return _run_tsne_sparse_mesh(key, x, weights, init, cfg=cfg,
+                                     mesh=mesh, interpret=interpret)
     if backend == "sparse" and cfg.grid_interval > 0:
-        return _run_tsne_sparse_adaptive(key, x, weights, cfg=cfg,
+        return _run_tsne_sparse_adaptive(key, x, weights, init, cfg=cfg,
                                          interpret=interpret)
-    return _run_tsne(key, x, weights, cfg=cfg, backend=backend,
+    return _run_tsne(key, x, weights, init, cfg=cfg, backend=backend,
                      interpret=interpret)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -133,3 +134,32 @@ def eq(a: U64, b: U64) -> jnp.ndarray:
 
 def less(a: U64, b: U64) -> jnp.ndarray:
     return (a[0] < b[0]) | ((a[0] == b[0]) & (a[1] < b[1]))
+
+
+def searchsorted(keys: U64, queries: U64) -> jnp.ndarray:
+    """Left insertion index of each query into lexicographically sorted keys.
+
+    ``jnp.searchsorted`` needs a single comparable dtype, which two-limb
+    keys do not have (and uint64 is unavailable without x64), so this is
+    the bisection spelled out over ``less``: a fixed ⌈log₂ L⌉+1 iteration
+    count makes it jit-compatible.  ``keys`` must be sorted ascending by
+    (hi, lo); returns int32 positions in [0, L], matching
+    ``np.searchsorted(side="left")`` on the packed 64-bit values.
+    """
+    n = int(keys[0].shape[0])
+    iters = max(1, n).bit_length() + 1    # halve [0, L] to a point, +1 slack
+    lo = jnp.zeros(queries[0].shape, jnp.int32)
+    hi = jnp.full(queries[0].shape, n, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) >> 1
+        mid_c = jnp.minimum(mid, max(n - 1, 0))
+        k = (keys[0][mid_c], keys[1][mid_c])
+        go_right = less(k, queries)
+        return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
+
+    if n == 0:
+        return lo
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo

@@ -359,16 +359,24 @@ def optimize_embedding(key: jax.Array, edges: jnp.ndarray,
 
 def run_umap(key: jax.Array, x: jnp.ndarray, cfg: UmapConfig,
              weights: Optional[jnp.ndarray] = None,
-             mesh=None) -> jnp.ndarray:
+             mesh=None, init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Full UMAP: kNN → fuzzy set → SGD embed.  Returns (N, dims).
 
     Every stage is memory-bounded: kNN streams ``cfg.block`` rows at a
     time, and symmetrization is sparse — no (N, N) buffer at any N.
     ``mesh`` row-block-shards both the kNN build and the SGD loop under
-    ``shard_map`` (see :func:`optimize_embedding`)."""
+    ``shard_map`` (see :func:`optimize_embedding`).
+
+    ``init`` seeds the SGD at the given (N, dims) float coordinates
+    instead of the uniform cold start — the warm-start hook the online
+    service uses to resume from a previous embedding.  Validated for
+    shape/dtype; works on the single-device and mesh paths alike."""
+    from repro.core.tsne import validate_init
     mesh = mesh_mod.resolve_mesh(mesh)
+    init = validate_init(init, x.shape[0], cfg.dims)
     idx, dist = knn_graph(x, cfg.n_neighbors, block=cfg.block, mesh=mesh,
                           method=cfg.knn_method, ann=cfg.ann)
     edges, memb = fuzzy_simplicial_set(idx, dist, weights=weights,
                                        search_iters=cfg.sigma_search_iters)
-    return optimize_embedding(key, edges, memb, x.shape[0], cfg, mesh=mesh)
+    return optimize_embedding(key, edges, memb, x.shape[0], cfg, init=init,
+                              mesh=mesh)

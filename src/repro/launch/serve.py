@@ -4,7 +4,9 @@
         --batch 8 --prompt-len 64 --gen 32 [--mesh 2,2]
 
 Prefill + decode loop with KV/SSM caches — the same serve_step the
-decode_32k / long_500k dry-run cells lower at pod scale.
+decode_32k / long_500k dry-run cells lower at pod scale.  (LM stack
+only: the Sketch-and-Scale serving API is ``core.service.SnsService``,
+demoed by examples/sns_service.py.)
 """
 import os
 import argparse

@@ -187,6 +187,53 @@ def test_nn_descent_is_one_fused_loop():
     assert loops == 1, [e.primitive.name for e in jaxpr.jaxpr.eqns]
 
 
+# ------------------------------------------------------------- query mode
+def _brute_query(q, x, k):
+    d2 = np.sum((np.asarray(q)[:, None, :] - np.asarray(x)[None]) ** 2, -1)
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return idx, np.sqrt(np.take_along_axis(d2, idx, axis=1))
+
+
+def test_knn_query_exact_matches_brute_force_no_self_exclusion():
+    """Asymmetric queries keep their corpus twin: a query identical to a
+    corpus point must return that point at distance ~0 (the transform()
+    identity contract), unlike the self-excluding graph build."""
+    x = _points(300, 5, 11)
+    q = jnp.concatenate([x[:16], _points(40, 5, 12)])     # 16 identities
+    idx, dist = neighbors.knn_query(q, x, 6)
+    bi, bd = _brute_query(q, x, 6)
+    # fp32 |a|²+|b|²−2ab cancellation leaves ~1e-2 noise at blob scale
+    np.testing.assert_allclose(np.asarray(dist), bd, atol=1e-2)
+    # identity queries: nearest neighbor is the twin at ~zero distance
+    np.testing.assert_array_equal(np.asarray(idx)[:16, 0], np.arange(16))
+    assert np.asarray(dist)[:16, 0].max() < 1e-2
+    # clamps k to N (not N-1: queries are not corpus members)
+    fi, _ = neighbors.knn_query(q[:4], x[:5], 50)
+    assert fi.shape == (4, 5)
+
+
+def test_ann_knn_query_recall_and_identity():
+    """ANN query path: recall ≥ 0.9 vs brute force on blob geometry, the
+    corpus-graph expansion only helps, and identity queries survive (the
+    −1 query ids never collide with corpus candidate ids)."""
+    x = _points(900, 6, 21)
+    q = jnp.concatenate([x[:32], _points(200, 6, 22)])
+    bi, _ = _brute_query(q, x, 10)
+    ai, ad = ann.ann_knn_query(q, x, 10)
+    m = q.shape[0]
+    rows = np.arange(m, dtype=np.int64)[:, None]
+    base = float(np.isin(np.asarray(ai) + rows * x.shape[0],
+                         bi + rows * x.shape[0]).mean())
+    assert base >= 0.9, base
+    gi, _ = ann.ann_knn_graph(x, 10)
+    ei, ed = ann.ann_knn_query(q, x, 10, corpus_graph=gi)
+    expanded = float(np.isin(np.asarray(ei) + rows * x.shape[0],
+                             bi + rows * x.shape[0]).mean())
+    assert expanded >= base - 1e-9, (base, expanded)
+    np.testing.assert_array_equal(np.asarray(ei)[:32, 0], np.arange(32))
+    assert np.asarray(ed)[:32, 0].max() < 1e-2
+
+
 # ------------------------------------- reverse_edge_values packed-key bound
 @pytest.mark.parametrize("n", [2 ** 16, 2 ** 16 + 1])
 def test_reverse_edge_values_across_packed_key_boundary(n):

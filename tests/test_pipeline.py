@@ -126,3 +126,18 @@ def test_coverage_one_when_every_cell_heavy():
     res = pipeline.run(cfg, jnp.asarray(pts[perm]),
                        umap_cfg=UmapConfig(n_neighbors=5, n_epochs=10))
     assert res.coverage == pytest.approx(1.0, rel=1e-6)
+
+
+def test_assign_points_to_hh_chunked_equivalence():
+    """The jitted chunked path == the one-shot pass (chunk >= n), across
+    chunk sizes that do and do not divide the batch."""
+    pts, _, _ = _mixture(5_000, seed=11)
+    cfg = pipeline.SnsConfig(bins=12, rows=8, log2_cols=12, top_k=128)
+    grid, hh = pipeline.sketch_stage(cfg, pts)
+    oneshot = pipeline.assign_points_to_hh(grid, hh, np.asarray(pts),
+                                           chunk=5_000)
+    assert (oneshot >= 0).any()
+    for chunk in (512, 733, 4_999, 50_000):
+        got = pipeline.assign_points_to_hh(grid, hh, np.asarray(pts),
+                                           chunk=chunk)
+        np.testing.assert_array_equal(got, oneshot)

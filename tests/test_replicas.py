@@ -63,6 +63,38 @@ def test_representatives_mass_and_jitter():
         assert (delta <= 0.25 * 1.0 + 1e-5).all()
 
 
+def test_jitter_is_keyed_by_cell_not_rank():
+    """Regression for the warm-start contract: a cell's representative
+    points must be a pure function of (cell key, slot, seed).  Reordering
+    the HH rows (as drift does when it reshuffles the count ranking) must
+    NOT re-roll anyone's jitter — a position-indexed draw would move every
+    matched rep's input point between refreshes and wreck the warm init."""
+    grid = quantize.GridSpec(dims=3, bins=8,
+                             lo=np.zeros(3, np.float32),
+                             hi=np.ones(3, np.float32) * 8)
+    coords = jnp.asarray([[1, 2, 3], [4, 5, 6], [7, 0, 2]], jnp.uint32)
+    hi, lo = quantize.pack(grid, coords)
+    perm = np.array([2, 0, 1])
+    a = HeavyHitters(key_hi=hi, key_lo=lo,
+                     count=jnp.asarray([30.0, 20.0, 10.0]),
+                     mask=jnp.ones((3,), bool))
+    b = HeavyHitters(key_hi=hi[perm], key_lo=lo[perm],
+                     count=jnp.asarray([90.0, 50.0, 40.0]),
+                     mask=jnp.ones((3,), bool))
+    key = jax.random.key(7)
+    ra = replicas.make_representatives(key, grid, a, scheme="uniform",
+                                       max_replicas=4)
+    rb = replicas.make_representatives(key, grid, b, scheme="uniform",
+                                       max_replicas=4)
+    pa = np.asarray(ra.points).reshape(3, 4, 3)
+    pb = np.asarray(rb.points).reshape(3, 4, 3)
+    np.testing.assert_array_equal(pa, pb[np.argsort(perm)])
+    # and a different seed still re-rolls everything
+    rc = replicas.make_representatives(jax.random.key(8), grid, a,
+                                       scheme="uniform", max_replicas=4)
+    assert not np.array_equal(np.asarray(rc.points), pa.reshape(12, 3))
+
+
 def test_masked_hh_get_no_replicas():
     grid = quantize.GridSpec(dims=2, bins=4,
                              lo=np.zeros(2, np.float32),

@@ -1,0 +1,170 @@
+"""Online SnsService: serving contract tests.
+
+The three levers get one pin each: (1) update() folds chunks into the
+live state without re-reading history and reports drift; (2) refresh()
+warm-starts from the cached embedding in a fraction of the cold
+iteration budget, matching returning representatives by (cell, slot);
+(3) transform() places out-of-sample queries barycentric-exactly (an
+identity query lands on its representative) and its jaxpr never
+allocates a (Q, N_reps) dense buffer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import iter_jaxpr_avals
+from repro.core import pipeline, quantize, stream
+from repro.core.service import (ServiceConfig, SnsService,
+                                _transform_chunks)
+from repro.core.tsne import TsneConfig
+from repro.core.umap import UmapConfig
+from repro.data.synthetic import MixtureSpec, gaussian_mixture
+
+SPEC = MixtureSpec(dims=3, n_clusters=4, cluster_std=0.05,
+                   background_frac=0.0)
+CFG = pipeline.SnsConfig(bins=6, rows=8, log2_cols=10, top_k=32,
+                         candidate_pool=96, ingest_chunk=512,
+                         embedder="tsne", embed_backend="dense",
+                         max_replicas=4, seed=0)
+TC = TsneConfig(dims=2, n_iter=120, exaggeration_iters=30,
+                momentum_switch=30, perplexity=10.0)
+SCFG = ServiceConfig(transform_chunk=128, transform_k=4)
+
+
+@pytest.fixture(scope="module")
+def data():
+    pts, _ = gaussian_mixture(4000, SPEC, seed=1)
+    drift, _ = gaussian_mixture(600, SPEC, seed=2)
+    return np.asarray(pts, np.float32), np.asarray(drift, np.float32)
+
+
+@pytest.fixture(scope="module")
+def scenario(data):
+    """One full serving episode: ingest → cold refresh → drift →
+    warm refresh.  Tests below assert on the captured results so the
+    (mutated) service state is deterministic for all of them."""
+    pts, drift = data
+    grid = quantize.fit_grid(np.concatenate([pts, drift]), CFG.bins)
+    svc = SnsService(CFG, grid, tsne_cfg=TC, service_cfg=SCFG)
+    stats0 = svc.update([pts[:2000], pts[2000:]])
+    cold = svc.refresh(mode="cold")
+    stats1 = svc.update(drift)
+    warm = svc.refresh()
+    return svc, cold, warm, stats0, stats1
+
+
+def test_update_reports_absorption_and_drift(scenario):
+    svc, _, _, stats0, stats1 = scenario
+    assert stats0["points"] == 4000.0
+    assert stats0["points_per_sec"] > 0
+    assert stats0["pending_fraction"] == 1.0   # nothing served yet
+    assert stats0["needs_refresh"]
+    # post-refresh drift: 600 of 4600 total ≈ 0.13 > default 0.1 gate
+    assert 0.12 < stats1["pending_fraction"] < 0.14
+    assert stats1["needs_refresh"]
+    # the warm refresh consumed the pending mass
+    assert svc.pending_fraction() == 0.0
+
+
+def test_warm_refresh_matches_and_cuts_iterations(scenario):
+    _, cold, warm, _, _ = scenario
+    assert not cold.warm and warm.warm
+    # same-distribution drift: most cells return
+    assert warm.n_matched > warm.n_new
+    assert 5 * warm.n_iters <= cold.n_iters
+    assert int(warm.kl_trace.shape[0]) == warm.n_iters
+    assert np.isfinite(np.asarray(warm.kl_trace)).all()
+    assert not np.isnan(np.asarray(warm.embedding)).any()
+
+
+def test_warm_refresh_without_cache_raises(data):
+    pts, _ = data
+    grid = quantize.fit_grid(pts, CFG.bins)
+    svc = SnsService(CFG, grid, tsne_cfg=TC, service_cfg=SCFG)
+    with pytest.raises(ValueError, match="no previous"):
+        svc.refresh(mode="warm")
+    with pytest.raises(ValueError, match="refresh"):
+        svc.transform(pts[:4])
+
+
+def test_transform_identity_query(scenario):
+    """A query identical to a representative must land (within fp
+    cancellation tolerance) on that representative's embedded coords."""
+    svc = scenario[0]
+    rep_x = np.asarray(svc._cache.rep_x)
+    rep_y = np.asarray(svc._cache.rep_y)
+    scale = np.abs(rep_y).max()
+    for i in (0, len(rep_x) // 2, len(rep_x) - 1):
+        y = svc.transform(rep_x[i])
+        assert np.linalg.norm(y - rep_y[i]) < 1e-3 * scale
+    # batched: every rep queried at once, chunked path (Q > chunk)
+    yb = svc.transform(np.tile(rep_x, (2, 1)))
+    want = np.tile(rep_y, (2, 1))
+    assert np.abs(yb - want).max() < 1e-2 * scale
+
+
+def test_transform_batch_is_finite_and_shaped(scenario):
+    svc = scenario[0]
+    q, _ = gaussian_mixture(1000, SPEC, seed=3)
+    y = svc.transform(np.asarray(q, np.float32))
+    assert y.shape == (1000, 2)
+    assert np.isfinite(y).all()
+    # placements stay inside the served embedding's bounding box (convex
+    # combinations of rep coordinates cannot escape it)
+    rep_y = np.asarray(svc._cache.rep_y)
+    assert (y.min(0) >= rep_y.min(0) - 1e-4).all()
+    assert (y.max(0) <= rep_y.max(0) + 1e-4).all()
+
+
+def test_transform_jaxpr_has_no_q_by_nreps_buffer(scenario):
+    """The batched path is pinned to peak O(chunk · N_reps): no traced
+    intermediate may carry BOTH the full query count and the rep count."""
+    svc = scenario[0]
+    n_reps = int(svc._cache.rep_x.shape[0])
+    Q, chunk = 1024, 128
+    q = jnp.zeros((Q, svc._cache.rep_x.shape[1]), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda qq: _transform_chunks(qq, svc._cache.rep_x,
+                                     svc._cache.rep_y, 4, chunk, 1e-12))(q)
+    for aval in iter_jaxpr_avals(jaxpr.jaxpr):
+        shape = getattr(aval, "shape", ())
+        assert not (Q in shape and n_reps in shape), shape
+
+
+def test_save_load_roundtrip(scenario, tmp_path):
+    svc = scenario[0]
+    path = tmp_path / "svc_ck"
+    svc.save(path)
+    svc2 = SnsService.load(path, CFG, svc.grid, tsne_cfg=TC,
+                           service_cfg=SCFG)
+    assert float(svc2.state.count) == float(svc.state.count)
+    np.testing.assert_array_equal(np.asarray(svc2._cache.rep_y),
+                                  np.asarray(svc._cache.rep_y))
+    q, _ = gaussian_mixture(64, SPEC, seed=4)
+    np.testing.assert_allclose(svc2.transform(np.asarray(q, np.float32)),
+                               svc.transform(np.asarray(q, np.float32)),
+                               rtol=1e-6)
+    # the resurrected fold keeps absorbing
+    more, _ = gaussian_mixture(256, SPEC, seed=5)
+    st = svc2.update(np.asarray(more, np.float32))
+    assert st["points"] == 256.0
+
+
+def test_umap_service_end_to_end(data):
+    pts, drift = data
+    cfg = pipeline.SnsConfig(bins=6, rows=8, log2_cols=10, top_k=32,
+                             candidate_pool=96, ingest_chunk=512,
+                             embedder="umap", max_replicas=4, seed=0)
+    uc = UmapConfig(dims=2, n_neighbors=6, n_epochs=60)
+    grid = quantize.fit_grid(np.concatenate([pts, drift]), cfg.bins)
+    svc = SnsService(cfg, grid, umap_cfg=uc, service_cfg=SCFG)
+    svc.update(pts)
+    cold = svc.refresh()
+    assert cold.kl_trace is None        # UMAP has no KL trace
+    svc.update(drift)
+    warm = svc.refresh()
+    assert warm.warm and warm.n_matched > 0
+    assert 5 * warm.n_iters <= cold.n_iters
+    y = svc.transform(pts[:100])
+    assert y.shape == (100, 2) and np.isfinite(y).all()

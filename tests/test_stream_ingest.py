@@ -253,3 +253,80 @@ def test_run_streaming_argument_validation(points):
         pipeline.run_streaming(CFG, mesh=mesh, shard_fn=lambda i, b: None)
     with pytest.raises(ValueError, match="single-host only"):
         pipeline.sketch_stage(CFG, _chunks(points, 500), mesh=mesh)
+
+
+# ------------------------------------------------- checkpoint-resumed ingest
+def test_checkpoint_resume_bit_identical(points, tmp_path):
+    """save_state/load_state mid-stream, then continuing, must reproduce
+    the unbroken run EXACTLY: same sketch table, same reservoir, same
+    heavy hitters, same count — the resumability contract the online
+    service's persistence rides on."""
+    from repro.core import heavy_hitters as hh_mod
+    grid = quantize.fit_grid(jnp.asarray(points), CFG.bins)
+    parts = np.array_split(np.asarray(points), 3)
+
+    def ingest(state, part):
+        return stream.ingest_all(state, grid, [part], CFG.ingest_chunk)
+
+    unbroken = stream.init(jax.random.key(CFG.seed), CFG.rows,
+                           CFG.log2_cols, CFG.candidate_pool)
+    for p in parts:
+        unbroken = ingest(unbroken, p)
+
+    broken = stream.init(jax.random.key(CFG.seed), CFG.rows,
+                         CFG.log2_cols, CFG.candidate_pool)
+    for i, p in enumerate(parts):
+        broken = ingest(broken, p)
+        ck = tmp_path / f"ck{i}"
+        stream.save_state(broken, ck)
+        broken = stream.load_state(ck)
+
+    assert float(broken.count) == float(unbroken.count) == float(N)
+    np.testing.assert_array_equal(np.asarray(broken.sketch.table),
+                                  np.asarray(unbroken.sketch.table))
+    hh_b = hh_mod.from_candidates(broken.sketch, broken.cands, CFG.top_k)
+    hh_u = hh_mod.from_candidates(unbroken.sketch, unbroken.cands,
+                                  CFG.top_k)
+    _assert_hh_identical(hh_b, hh_u)
+
+
+def test_checkpoint_resume_error_bound_monotone(points, tmp_path):
+    """With a pool too small for the occupied cells the reservoir evicts;
+    the space-saving watermark must be monotone non-decreasing across
+    every save/load boundary (a reset watermark would understate the HH
+    error after resume)."""
+    cfg = pipeline.SnsConfig(bins=8, rows=8, log2_cols=10, top_k=8,
+                             candidate_pool=16, ingest_chunk=512)
+    grid = quantize.fit_grid(jnp.asarray(points), cfg.bins)
+    state = stream.init(jax.random.key(cfg.seed), cfg.rows,
+                        cfg.log2_cols, cfg.candidate_pool)
+    bounds = []
+    for i, part in enumerate(np.array_split(np.asarray(points), 5)):
+        state = stream.ingest_all(state, grid, [part], cfg.ingest_chunk)
+        bounds.append(float(stream.space_saving_bound(state)))
+        ck = tmp_path / f"mb{i}"
+        stream.save_state(state, ck)
+        state = stream.load_state(ck)
+        # the reloaded watermark is the saved one, bit-exact
+        assert float(stream.space_saving_bound(state)) == bounds[-1]
+    assert bounds == sorted(bounds)
+    assert bounds[-1] > 0.0        # evictions actually happened
+
+
+def test_save_state_extras_roundtrip(points, tmp_path):
+    """The extra= side-channel (the service's cache persistence) must
+    round-trip arrays exactly and stay invisible to plain load_state."""
+    state = stream.init(jax.random.key(0), CFG.rows, CFG.log2_cols,
+                        CFG.candidate_pool)
+    extra = {"rep_y": np.arange(12, dtype=np.float32).reshape(6, 2),
+             "pending": np.float64(123.0)}
+    ck = tmp_path / "extras"
+    stream.save_state(state, ck, extra=extra)
+    plain = stream.load_state(ck)
+    assert float(plain.count) == 0.0
+    _, extras = stream.load_state(ck, with_extra=True)
+    assert set(extras) == {"rep_y", "pending"}
+    np.testing.assert_array_equal(extras["rep_y"], extra["rep_y"])
+    assert float(extras["pending"]) == 123.0
+    with pytest.raises(ValueError, match="non-empty"):
+        stream.save_state(state, ck, extra={"": np.zeros(1)})

@@ -66,3 +66,45 @@ def test_weighted_tsne_runs():
     y, kls = tsne.run_tsne(jax.random.key(1), x, cfg, weights=w)
     assert not np.isnan(np.asarray(y)).any()
     assert np.isfinite(np.asarray(kls)).all()
+
+
+def test_init_propagates_to_iteration_zero():
+    """The warm-start hook: with n_iter=0 the returned embedding IS the
+    init (bit-exact — nothing may perturb iteration 0), and with
+    iterations two different inits must yield different trajectories
+    (the init reaches the optimizer, not just the return path)."""
+    x, _ = _blobs(20, [[0, 0], [4, 4]], seed=4)
+    y0 = 0.05 * np.asarray(
+        jax.random.normal(jax.random.key(7), (40, 2)), np.float32)
+    cfg = tsne.TsneConfig(n_iter=0, perplexity=10.0,
+                          exaggeration_iters=0, momentum_switch=0)
+    y, _ = tsne.run_tsne(jax.random.key(0), x, cfg, init=jnp.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(y), y0)
+    cfg1 = tsne.TsneConfig(n_iter=1, perplexity=10.0,
+                           exaggeration_iters=0, momentum_switch=0)
+    yw, _ = tsne.run_tsne(jax.random.key(0), x, cfg1, init=jnp.asarray(y0))
+    y2, _ = tsne.run_tsne(jax.random.key(0), x, cfg1,
+                          init=jnp.asarray(2.0 * y0))
+    assert np.abs(np.asarray(yw) - np.asarray(y2)).max() > 1e-6
+
+
+def test_init_propagates_sparse_backend():
+    x, _ = _blobs(30, [[0, 0, 0], [4, 4, 4]], seed=5)
+    y0 = 0.05 * np.asarray(
+        jax.random.normal(jax.random.key(8), (60, 2)), np.float32)
+    cfg = tsne.TsneConfig(n_iter=0, perplexity=8.0, backend="sparse",
+                          exaggeration_iters=0, momentum_switch=0)
+    y, _ = tsne.run_tsne(jax.random.key(0), x, cfg, init=jnp.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(y), y0)
+
+
+def test_init_validation_rejects_bad_shape_and_dtype():
+    import pytest
+    x, _ = _blobs(10, [[0, 0]], seed=6)
+    cfg = tsne.TsneConfig(n_iter=1, perplexity=5.0)
+    with pytest.raises(ValueError, match="shape"):
+        tsne.run_tsne(jax.random.key(0), x, cfg,
+                      init=jnp.zeros((3, 2), jnp.float32))
+    with pytest.raises(ValueError, match="float"):
+        tsne.run_tsne(jax.random.key(0), x, cfg,
+                      init=jnp.zeros((10, 2), jnp.int32))

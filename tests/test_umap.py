@@ -88,3 +88,17 @@ def test_negative_sampling_excludes_edge_endpoints():
                                            2, cfg, init=init))
     assert np.isfinite(y).all()
     assert np.linalg.norm(y[0] - y[1]) < 0.1
+
+
+def test_run_umap_init_propagates_to_epoch_zero():
+    """Warm-start hook on the full run_umap path: n_epochs=0 returns the
+    init bit-exactly; a bad shape fails loudly."""
+    x, _ = _blobs(20, [[0, 0], [4, 0]], seed=9)
+    y0 = 0.1 * np.asarray(
+        jax.random.normal(jax.random.key(3), (40, 2)), np.float32)
+    cfg = umap.UmapConfig(n_neighbors=6, n_epochs=0)
+    y = umap.run_umap(jax.random.key(1), x, cfg, init=jnp.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(y), y0)
+    with pytest.raises(ValueError, match="shape"):
+        umap.run_umap(jax.random.key(1), x, cfg,
+                      init=jnp.zeros((3, 2), jnp.float32))
