@@ -22,6 +22,9 @@ Emits CSV blocks (name, value, paper reference) for:
   * service              — online service: ingest absorption points/sec,
                            warm vs cold refresh iterations-to-target,
                            out-of-sample transform queries/sec
+  * resilience           — quality under shard loss (coverage, widened
+                           error bound, HH recall, KL vs no-loss), retry
+                           rescue of transient faults, straggler cutoff
 
 Every bench is registered by module name and imported via importlib at
 dispatch time — a registered module that fails to import aborts the run
@@ -103,6 +106,9 @@ def build_jobs(fast: bool):
             else m.run(json_out=m.DEFAULT_JSON))),
         ("service", "bench_service", lambda m: (
             m.run_smoke(json_out="BENCH_service_ci.json") if fast
+            else m.run(json_out=m.DEFAULT_JSON))),
+        ("resilience", "bench_resilience", lambda m: (
+            m.run_smoke(json_out="BENCH_resilience_ci.json") if fast
             else m.run(json_out=m.DEFAULT_JSON))),
     ]
 

@@ -201,6 +201,22 @@ def concat(*cands: Candidates) -> Candidates:
         mask=jnp.concatenate([c.mask for c in cands]))
 
 
+def runs_from_candidates(c: Candidates) -> KeyRuns:
+    """View a candidate set (DISTINCT keys — a reservoir or a top-k, any
+    storage order) as :class:`KeyRuns`, the currency :func:`merge_runs`
+    consumes: one lexsort puts live keys ascending (INVALID padding sorts
+    last, count forced to 0), satisfying the globally-non-decreasing
+    contract.  This is what lets two *reservoirs* merge through the same
+    sort-free path as the streaming fold — the host-level mergeability
+    behind ``stream.merge_states`` / partial aggregation."""
+    order = jnp.lexsort((c.key_lo, c.key_hi))
+    return KeyRuns(
+        key_hi=c.key_hi[order],
+        key_lo=c.key_lo[order],
+        count=jnp.where(c.mask, c.count, 0.0)[order].astype(jnp.float32),
+        live=c.mask[order])
+
+
 def merge_topk(a: Candidates, b: Candidates, k: int) -> Candidates:
     """Unordered reservoir merge: concat → lexsort → dedupe (sum counts of
     equal keys) → exact top-k.  Works for ANY input order (the all-gather

@@ -26,10 +26,26 @@ shim, linear shard indexing, row-block sizing) now lives in
 (``core.tsne``/``core.umap`` row-block-shard their iteration loops the
 same way; ``SnsConfig.embed_mesh`` wires it through the pipeline) — the
 whole ingest → HH → embed chain can run without leaving ``shard_map``.
+
+Failure semantics (two tiers, by construction):
+
+* The SPMD paths above (``geo_extract``, ``geo_extract_from_shards``)
+  run inside ONE ``shard_map`` program — XLA collectives cannot lose a
+  participant, so a dead device fails the whole dispatch.  Nothing is
+  retried and nothing degrades; this tier is all-or-nothing by design.
+* :func:`resilient_extract` is the HOST-level topology the paper
+  actually describes (edge nodes ship summaries to a master): each
+  shard's fold is an independent job, transient failures are RETRIED
+  under a ``resilience.RetryPolicy``, stragglers are cut off at a
+  deadline, and lost shards DEGRADE into partial aggregation — the
+  surviving sketches merge linearly (``stream.merge_states``), coverage
+  drops below 1, and the heavy-hitter error bound widens by the
+  estimated lost mass.  ``min_coverage`` is the fail-loud floor.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -164,3 +180,118 @@ def geo_extract_from_shards(mesh: Mesh, grid: GridSpec,
     hh, merged, total, evict = spmd(sk0)
     return GeoSketchResult(hh=hh, merged=merged, total_count=total,
                            evict_max=evict)
+
+
+class ResilientExtractResult(NamedTuple):
+    """Partial-aggregation-aware extraction result: the usual replicated
+    outputs plus the quantified damage of whatever was lost."""
+    hh: HeavyHitters              # top-K over the OBSERVED sub-stream
+    merged: CountSketch           # merge of the shards that delivered
+    observed_count: float         # mass actually folded
+    coverage: float               # observed / expected   (1.0 = no loss)
+    hh_error_bound: float         # survivor watermark + estimated lost mass
+    lost: Tuple[int, ...]         # shard ids that never delivered
+    statuses: list                # per-shard resilience.ShardStatus
+    retries: int                  # extra attempts beyond the first, total
+
+
+def shard_ingest_jobs(grid: GridSpec, shard_chunks: Mapping, *,
+                      seed: int, rows: int, log2_cols: int, pool: int,
+                      chunk_size: int, superbatch: int = 1,
+                      faults=None) -> Dict[int, Callable[[], tuple]]:
+    """Build the per-shard fold jobs ``resilience.collect_shards`` runs.
+
+    ``shard_chunks`` maps shard id → a chunk source (an iterable of
+    (n, D) arrays, or a zero-arg callable returning one — callables are
+    re-invoked per attempt, so a retried shard re-reads its data).  All
+    jobs draw hash params from the SAME seed (the paper's identical-
+    hash-functions contract), so their states merge linearly.  Each job
+    returns ``(state, digest)`` with the digest computed at the source —
+    the collector's ``verify=True`` detects in-transit corruption.
+
+    ``faults`` (a :class:`repro.core.faults.FaultPlan`) wraps both the
+    chunk stream and the job itself — the reproducible-chaos hook the
+    tests and ``bench_resilience`` drive."""
+    import dataclasses as _dc
+
+    from repro.core import faults as faults_mod
+
+    # split the plan across its two injection points: delivery faults
+    # (drop / flaky / delay) fire ONCE per attempt in chaos_shard_job —
+    # whose counter ticks on every attempt — while the chunk wrapper
+    # inside the job carries only the data faults (duplicate / corrupt).
+    # Injecting delivery faults at both levels would double-apply them
+    # with drifting attempt counters (the inner one only advances when
+    # the outer roll passes), turning transient faults semi-permanent.
+    chunk_faults = None if faults is None else _dc.replace(
+        faults, drop=0.0, drop_shards=(), flaky=0.0, delay=0.0)
+
+    jobs: Dict[int, Callable[[], tuple]] = {}
+    for shard, source in shard_chunks.items():
+        def job(shard=shard, source=source, attempt_box=[0]):
+            attempt = attempt_box[0]
+            attempt_box[0] += 1
+            chunks = source() if callable(source) else source
+            if chunk_faults is not None:
+                chunks = faults_mod.chaos_chunks(chunk_faults, shard,
+                                                 chunks, attempt=attempt)
+            st = stream_mod.init(jax.random.key(seed), rows, log2_cols,
+                                 pool)
+            st = stream_mod.ingest_all(st, grid, chunks, chunk_size,
+                                       superbatch=superbatch)
+            st = jax.tree_util.tree_map(
+                lambda x: jax.device_get(x), st)   # ship host-side bytes
+            return st, stream_mod.state_digest(st)
+        if faults is not None:
+            # job-level faults (permanent drop / flaky / delay / state
+            # corruption after the digest) stack on the chunk-level ones
+            jobs[shard] = faults_mod.chaos_shard_job(faults, shard, job)
+        else:
+            jobs[shard] = job
+    return jobs
+
+
+def resilient_extract(grid: GridSpec, shard_chunks, *,
+                      rows: int, log2_cols: int, top_k: int,
+                      candidate_pool: int = 0, seed: int = 0,
+                      chunk_size: int = 65_536, superbatch: int = 1,
+                      policy=None, deadline: Optional[float] = None,
+                      min_coverage: float = 0.0,
+                      expected_counts: Optional[Mapping[int, float]] = None,
+                      faults=None) -> ResilientExtractResult:
+    """Host-level fault-tolerant heavy-hitter extraction.
+
+    The paper's actual topology: every shard folds its own stream into a
+    (sketch ⊕ reservoir) summary and ships ONLY the summary; the master
+    merges.  Unlike the ``shard_map`` SPMD paths, shards here are
+    independent host-side jobs, so the full failure menu applies and is
+    handled (see the module docstring's failure-semantics contract):
+    transient errors retry under ``policy``, stragglers are cut off at
+    ``deadline``, permanent losses degrade into partial aggregation with
+    ``coverage < 1`` and a widened ``hh_error_bound``, and coverage
+    below ``min_coverage`` raises ``resilience.CoverageError``.
+
+    ``shard_chunks``: mapping shard id → chunk source, or a sequence
+    (ids 0..S-1).  ``grid`` must be agreed up front (the shared-
+    hypercube contract — geo-distributed sites cannot take a global
+    min/max pass)."""
+    from repro.core import resilience
+
+    if not isinstance(shard_chunks, Mapping):
+        shard_chunks = dict(enumerate(shard_chunks))
+    if not shard_chunks:
+        raise ValueError("resilient_extract needs at least one shard")
+    pool = candidate_pool or 2 * top_k
+    jobs = shard_ingest_jobs(
+        grid, shard_chunks, seed=seed, rows=rows, log2_cols=log2_cols,
+        pool=pool, chunk_size=chunk_size, superbatch=superbatch,
+        faults=faults)
+    agg = resilience.collect_shards(
+        jobs, policy=policy, deadline=deadline, min_coverage=min_coverage,
+        expected_counts=expected_counts, verify=True)
+    hh = hh_mod.from_candidates(agg.state.sketch, agg.state.cands, top_k)
+    return ResilientExtractResult(
+        hh=hh, merged=agg.state.sketch,
+        observed_count=agg.observed_count, coverage=agg.coverage,
+        hh_error_bound=agg.hh_error_bound, lost=agg.lost,
+        statuses=agg.statuses, retries=agg.retries)

@@ -87,6 +87,64 @@ class SnsConfig:
     embed_mesh: object = None      # None | int | jax.sharding.Mesh
     seed: int = 0
 
+    def __post_init__(self):
+        """Fail-loud validation: nonsensical values are caught HERE with
+        a message naming the knob, instead of surfacing as shape errors
+        deep inside a jitted trace."""
+        checks = [
+            (self.bins >= 2, f"bins (grid M) must be >= 2, got {self.bins}"),
+            (self.rows >= 1,
+             f"rows (sketch R) must be >= 1 — a zero-row sketch estimates "
+             f"nothing; got {self.rows}"),
+            (1 <= self.log2_cols <= 31,
+             f"log2_cols must be in [1, 31], got {self.log2_cols}"),
+            (self.top_k >= 1, f"top_k must be >= 1, got {self.top_k}"),
+            (self.candidate_pool >= 0,
+             f"candidate_pool must be >= 0 (0 = 2*top_k), "
+             f"got {self.candidate_pool}"),
+            (self.ingest_chunk >= 1,
+             f"ingest_chunk must be >= 1, got {self.ingest_chunk}"),
+            (self.ingest_superbatch >= 1,
+             f"ingest_superbatch must be >= 1 (1 = off), "
+             f"got {self.ingest_superbatch}"),
+            (self.replica_scheme in ("uniform", "rank", "count"),
+             f"replica_scheme must be 'uniform'|'rank'|'count', "
+             f"got {self.replica_scheme!r}"),
+            (self.max_replicas >= 1,
+             f"max_replicas must be >= 1, got {self.max_replicas}"),
+            (0.0 <= self.jitter_frac <= 1.0,
+             f"jitter_frac must be in [0, 1] (fraction of a cell), "
+             f"got {self.jitter_frac}"),
+            (self.embedder in ("umap", "tsne"),
+             f"embedder must be 'umap'|'tsne', got {self.embedder!r}"),
+            (self.embed_dims >= 1,
+             f"embed_dims must be >= 1, got {self.embed_dims}"),
+            (self.embed_backend in ("dense", "tiled", "pallas", "sparse"),
+             f"embed_backend must be 'dense'|'tiled'|'pallas'|'sparse', "
+             f"got {self.embed_backend!r}"),
+            (self.embed_block >= 1,
+             f"embed_block must be >= 1, got {self.embed_block}"),
+            (self.embed_knn >= 0,
+             f"embed_knn must be >= 0 (0 = 3*perplexity), "
+             f"got {self.embed_knn}"),
+            (self.embed_grid >= 2,
+             f"embed_grid must be >= 2, got {self.embed_grid}"),
+            (self.embed_grid_interval >= 0.0,
+             f"embed_grid_interval must be >= 0 (0 = fixed grid), "
+             f"got {self.embed_grid_interval}"),
+            (self.embed_grid_max >= self.embed_grid,
+             f"embed_grid_max ({self.embed_grid_max}) must be >= "
+             f"embed_grid ({self.embed_grid})"),
+            (self.embed_cic in ("xla", "pallas"),
+             f"embed_cic must be 'xla'|'pallas', got {self.embed_cic!r}"),
+            (self.embed_knn_method in ("exact", "auto", "ann"),
+             f"embed_knn_method must be 'exact'|'auto'|'ann', "
+             f"got {self.embed_knn_method!r}"),
+        ]
+        bad = [msg for ok, msg in checks if not ok]
+        if bad:
+            raise ValueError("invalid SnsConfig: " + "; ".join(bad))
+
 
 @dataclasses.dataclass
 class SnsResult:
@@ -100,9 +158,18 @@ class SnsResult:
     # candidate-stage recall diagnostic, measured on every path: the
     # largest exact count ever withheld from the candidate set (reservoir
     # eviction when streaming; local top-L truncation one-shot; pmax over
-    # shards on a mesh).  0.0 = the candidate set provably contains every
-    # occupied cell, so the heavy hitters are exact up to the pool size
+    # shards on a mesh).  On the resilient path this is WIDENED by the
+    # estimated mass of lost shards (resilience.widened_bound).  0.0 =
+    # the candidate set provably contains every occupied cell, so the
+    # heavy hitters are exact up to the pool size
     hh_error_bound: float = 0.0
+    # fraction of the expected stream mass actually observed by ingest:
+    # 1.0 everywhere except the resilient path after shard loss, where
+    # partial aggregation folds only the shards that delivered
+    # (distinct from `coverage`, the HH-mass fraction OF the observed)
+    ingest_coverage: float = 1.0
+    # shard ids the resilient path lost (empty on every other path)
+    lost_shards: Tuple[int, ...] = ()
 
 
 def _chunk_stream(chunks) -> Iterable:
@@ -356,12 +423,50 @@ def run_streaming(cfg: SnsConfig, chunks=None,
                      hh_error_bound=bound)
 
 
+def run_resilient(cfg: SnsConfig, shard_chunks, grid: GridSpec, *,
+                  policy=None, deadline: Optional[float] = None,
+                  min_coverage: float = 0.0, expected_counts=None,
+                  faults=None, tsne_cfg=None, umap_cfg=None) -> SnsResult:
+    """Full SnS over independent per-shard chunk sources with failure
+    handling — the fault-tolerant front-end of :func:`run_streaming`.
+
+    Each shard folds its own stream into a summary (host-level jobs, not
+    one SPMD program), so shards can fail without failing the run:
+    transient errors RETRY under ``policy`` (``resilience.RetryPolicy``),
+    stragglers are cut off at ``deadline`` seconds, permanent losses
+    DEGRADE into partial aggregation — the result carries
+    ``ingest_coverage < 1``, the lost shard ids, and an
+    ``hh_error_bound`` widened by the estimated lost mass — and coverage
+    below ``min_coverage`` FAILS LOUD (``resilience.CoverageError``).
+    See ``geo.resilient_extract`` for the collection machinery and
+    ``core.faults`` for the reproducible-chaos hook (``faults=``).
+
+    ``grid`` is required up front (the shared-hypercube contract: sites
+    that may be lost cannot be part of a global min/max pass)."""
+    res = geo.resilient_extract(
+        grid, shard_chunks, rows=cfg.rows, log2_cols=cfg.log2_cols,
+        top_k=cfg.top_k, candidate_pool=cfg.candidate_pool, seed=cfg.seed,
+        chunk_size=cfg.ingest_chunk, superbatch=cfg.ingest_superbatch,
+        policy=policy, deadline=deadline, min_coverage=min_coverage,
+        expected_counts=expected_counts, faults=faults)
+    reps, emb, w, ids = embed_stage(cfg, grid, res.hh, tsne_cfg=tsne_cfg,
+                                    umap_cfg=umap_cfg)
+    coverage = float(jnp.sum(res.hh.count)) / max(res.observed_count, 1.0)
+    return SnsResult(grid=grid, hh=res.hh, reps=reps, embedding=emb,
+                     rep_weight=w, rep_hh_id=ids, coverage=coverage,
+                     hh_error_bound=res.hh_error_bound,
+                     ingest_coverage=res.coverage, lost_shards=res.lost)
+
+
 def chunks_from_loader(plan, host: int,
                        make_batch: Callable[[int, int], np.ndarray],
                        batches_per_shard: int = 1,
                        steal: bool = False,
                        globally_completed=None,
-                       on_shard_done: Optional[Callable[[int], None]] = None
+                       on_shard_done: Optional[Callable[[int], None]] = None,
+                       faults=None,
+                       on_shard_error: Optional[
+                           Callable[[int, Exception], bool]] = None
                        ) -> Callable:
     """Adapt a ``data.loader.ShardPlan`` into the re-iterable chunk factory
     ``run_streaming`` consumes.  Each pass builds a fresh ``ShardedLoader``
@@ -379,15 +484,29 @@ def chunks_from_loader(plan, host: int,
     one board process every shard exactly once between them
     (tests/test_loader.py::test_chunks_from_loader_steals_exactly_once).
 
+    Fault tolerance: ``faults`` (a ``core.faults.FaultPlan``) wraps
+    ``make_batch`` with reproducible chaos, and ``on_shard_error(shard,
+    exc) -> bool`` decides a failing shard's fate — return True to skip
+    it (the loader records it in ``ShardedLoader.failed``, its batches
+    are withheld all-or-nothing, and ingest degrades to the surviving
+    shards), False/None to re-raise (fail loud).  Skipped shards are NOT
+    marked completed, so a shared board leaves them for another host's
+    steal pass to rescue.
+
     Caveat: with ``grid=None`` the pipeline iterates the factory twice
     (min/max pass, then ingest) while the board keeps moving — supply the
     grid up front so only the single ingest pass claims shards.
     """
     from repro.data.loader import ShardedLoader
 
+    if faults is not None:
+        from repro.core import faults as faults_mod
+        make_batch = faults_mod.chaos_make_batch(faults, make_batch)
+
     def factory():
         loader = ShardedLoader(plan, host, make_batch,
-                               batches_per_shard=batches_per_shard)
+                               batches_per_shard=batches_per_shard,
+                               on_error=on_shard_error)
 
         def drain(pairs):
             prev = None

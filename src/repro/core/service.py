@@ -33,6 +33,28 @@ operations, each a distinct perf lever:
 The grid is fixed at construction (the paper's shared-hypercube
 contract): cell keys — the identity that the warm-start matching relies
 on — are only comparable across refreshes under one grid.
+
+Failure semantics (what retries, what degrades, what fails loud):
+
+* :meth:`SnsService.update_shards` ingests per-shard sources through the
+  resilience collector: transient shard failures RETRY under a
+  ``RetryPolicy``, stragglers are cut off at a deadline, permanent
+  losses DEGRADE into partial aggregation (the service keeps serving;
+  ``health()`` reports ``coverage < 1`` and the widened error bound),
+  and coverage under ``min_coverage`` FAILS LOUD without touching the
+  live fold.
+* :meth:`SnsService.refresh` is TRANSACTIONAL: the new snapshot is built
+  entirely off to the side and swapped in atomically; any exception
+  mid-refresh leaves the previous snapshot serving (``transform()``
+  never observes a half-built state) and is recorded in ``health()``
+  before re-raising.
+* :meth:`SnsService.save` writes atomically (temp + rename) with a
+  checksum and rotates the previous generation to a ``.bak``;
+  :meth:`SnsService.load` verifies the checksum and falls back to that
+  previous good generation if the newest checkpoint is torn or bit-rotted.
+* Calling :meth:`transform` / :meth:`save` before the first refresh
+  raises :class:`ServiceNotReadyError` (a ``ValueError``) — never an
+  attribute or shape error from deep inside a trace.
 """
 from __future__ import annotations
 
@@ -45,11 +67,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import geo
 from repro.core import heavy_hitters as hh_mod
 from repro.core import neighbors, pipeline, replicas
+from repro.core import resilience
 from repro.core import stream as stream_mod
 from repro.core.pipeline import SnsConfig
 from repro.core.quantize import GridSpec
+
+
+class ServiceNotReadyError(ValueError):
+    """transform()/save() called before the first successful refresh()."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +100,26 @@ class ServiceConfig:
     transform_k: int = 8
     transform_chunk: int = 4096
     transform_eps: float = 1e-12
+
+    def __post_init__(self):
+        bad = []
+        if not 0.0 <= self.refresh_drift <= 1.0:
+            bad.append(f"refresh_drift={self.refresh_drift} (need [0, 1])")
+        if self.error_ratio < 0:
+            bad.append(f"error_ratio={self.error_ratio} (need >= 0)")
+        if self.warm_iters < 0:
+            bad.append(f"warm_iters={self.warm_iters} (need >= 0)")
+        if self.warm_factor < 1:
+            bad.append(f"warm_factor={self.warm_factor} (need >= 1)")
+        if self.transform_k < 1:
+            bad.append(f"transform_k={self.transform_k} (need >= 1)")
+        if self.transform_chunk < 1:
+            bad.append(f"transform_chunk={self.transform_chunk} "
+                       "(need >= 1)")
+        if not self.transform_eps > 0:
+            bad.append(f"transform_eps={self.transform_eps} (need > 0)")
+        if bad:
+            raise ValueError("invalid ServiceConfig: " + "; ".join(bad))
 
 
 @dataclasses.dataclass
@@ -143,6 +191,13 @@ class SnsService:
                                      cfg.log2_cols, pool)
         self._cache: Optional[EmbedCache] = None
         self._pending = 0.0   # mass ingested since the last refresh
+        # resilience / health bookkeeping (see health())
+        self._lost_mass = 0.0          # estimated mass of dropped shards
+        self._lost_shards: tuple = ()  # shard ids lost across updates
+        self._update_retries = 0       # retry attempts spent in updates
+        self._refreshes = 0
+        self._refresh_failures = 0
+        self._last_refresh: Optional[Dict[str, object]] = None
 
     # ------------------------------------------------------------ ingest
     def update(self, chunks) -> Dict[str, float]:
@@ -168,6 +223,54 @@ class SnsService:
                 "pending_fraction": self.pending_fraction(),
                 "needs_refresh": self.needs_refresh()}
 
+    def update_shards(self, shard_chunks, *,
+                      policy: Optional[resilience.RetryPolicy] = None,
+                      deadline: Optional[float] = None,
+                      min_coverage: float = 0.0,
+                      expected_counts=None,
+                      faults=None) -> Dict[str, float]:
+        """Fold per-shard sources into the live state resiliently.
+
+        ``shard_chunks``: dict ``{shard_id: chunks-or-factory}`` (or a
+        sequence, enumerated).  Each shard is ingested independently
+        (retried per ``policy``, cut off at ``deadline`` seconds), the
+        surviving partial sketches are merged — CountSketch linearity
+        makes the merge exactly the fold of the surviving sub-stream —
+        and the merged state is folded into the live one.  Lost shards
+        widen the served error bound (``health()``) instead of killing
+        the service; coverage below ``min_coverage`` raises
+        :class:`~repro.core.resilience.CoverageError` WITHOUT touching
+        the live fold.
+        """
+        if not isinstance(shard_chunks, dict):
+            shard_chunks = dict(enumerate(shard_chunks))
+        pool = int(self.state.cands.capacity)
+        jobs = geo.shard_ingest_jobs(
+            self.grid, shard_chunks, seed=self.cfg.seed,
+            rows=self.cfg.rows, log2_cols=self.cfg.log2_cols, pool=pool,
+            chunk_size=self.cfg.ingest_chunk,
+            superbatch=self.cfg.ingest_superbatch, faults=faults)
+        t0 = time.perf_counter()
+        agg = resilience.collect_shards(
+            jobs, policy=policy, deadline=deadline,
+            min_coverage=min_coverage, expected_counts=expected_counts,
+            verify=True)
+        # only now touch the live fold (CoverageError above leaves it be)
+        self.state = stream_mod.merge_states(self.state, agg.state)
+        absorbed = float(agg.observed_count)
+        dt = time.perf_counter() - t0
+        self._pending += absorbed
+        self._lost_mass += float(agg.lost_mass)
+        self._lost_shards = tuple(sorted(set(self._lost_shards)
+                                         | set(agg.lost)))
+        self._update_retries += agg.retries
+        return {"points": absorbed, "seconds": dt,
+                "points_per_sec": absorbed / dt if dt > 0 else 0.0,
+                "coverage": agg.coverage, "lost": list(agg.lost),
+                "retries": agg.retries,
+                "pending_fraction": self.pending_fraction(),
+                "needs_refresh": self.needs_refresh()}
+
     def pending_fraction(self) -> float:
         """Fraction of all ingested mass not yet reflected in the served
         embedding (1.0 before the first refresh)."""
@@ -180,8 +283,23 @@ class SnsService:
             return True
         if self.pending_fraction() >= self.scfg.refresh_drift:
             return True
-        bound = float(stream_mod.space_saving_bound(self.state))
-        return bound >= self.scfg.error_ratio * self._cache.min_hh_count
+        return (self.error_bound()
+                >= self.scfg.error_ratio * self._cache.min_hh_count)
+
+    def error_bound(self) -> float:
+        """Served per-cell count error bound: the space-saving eviction
+        watermark widened by the mass of any shards lost in
+        :meth:`update_shards` (resilience.widened_bound)."""
+        return resilience.widened_bound(
+            float(stream_mod.space_saving_bound(self.state)),
+            self._lost_mass)
+
+    def coverage(self) -> float:
+        """Fraction of the offered stream actually folded (1.0 when no
+        shard has ever been lost)."""
+        seen = float(self.state.count)
+        offered = seen + self._lost_mass
+        return seen / offered if offered > 0 else 1.0
 
     # ----------------------------------------------------------- refresh
     def refresh(self, mode: str = "auto") -> RefreshResult:
@@ -197,6 +315,32 @@ class SnsService:
         if mode == "warm" and self._cache is None:
             raise ValueError("warm refresh requested but no previous "
                              "embedding exists; run refresh() first")
+        t0 = time.perf_counter()
+        try:
+            cache, result = self._build_snapshot(mode)
+        except Exception as e:
+            # transactional: the half-built snapshot is dropped on the
+            # floor — self._cache still serves the previous embedding
+            self._refresh_failures += 1
+            self._last_refresh = {
+                "ok": False, "mode": mode, "error": repr(e),
+                "seconds": time.perf_counter() - t0}
+            raise
+        # commit: swap the snapshot in atomically (plain attribute
+        # assignment — transform() sees either the old or the new cache)
+        self._cache = cache
+        self._pending = 0.0
+        self._refreshes += 1
+        self._last_refresh = {
+            "ok": True, "mode": mode, "warm": result.warm,
+            "n_matched": result.n_matched, "n_new": result.n_new,
+            "n_iters": result.n_iters,
+            "seconds": time.perf_counter() - t0}
+        return result
+
+    def _build_snapshot(self, mode: str):
+        """Build the next serving snapshot entirely off to the side.
+        Returns (EmbedCache, RefreshResult); never mutates self."""
         cfg = self.cfg
         hh = hh_mod.from_candidates(self.state.sketch, self.state.cands,
                                     cfg.top_k)
@@ -221,15 +365,16 @@ class SnsService:
         emb, trace = pipeline.embed_points(cfg, kembed, x, wj, ecfg,
                                            init=init)
         live_counts = np.asarray(hh.count)[np.asarray(hh.mask).astype(bool)]
-        self._cache = EmbedCache(
+        cache = EmbedCache(
             rep_cell=cells, rep_slot=slots, rep_x=x, rep_y=emb,
             rep_w=w, rep_ids=ids,
             min_hh_count=float(live_counts.min()) if live_counts.size
             else 0.0)
-        self._pending = 0.0
-        return RefreshResult(embedding=emb, weights=w, hh_ids=ids,
-                             warm=warm, n_matched=n_matched, n_new=n_new,
-                             n_iters=n_iters, kl_trace=trace)
+        result = RefreshResult(embedding=emb, weights=w, hh_ids=ids,
+                               warm=warm, n_matched=n_matched,
+                               n_new=n_new, n_iters=n_iters,
+                               kl_trace=trace)
+        return cache, result
 
     def _warm_init(self, pts, cells, slots):
         """Seed coordinates for the new rep set from the cached embedding:
@@ -283,14 +428,40 @@ class SnsService:
             max(1, cold // self.scfg.warm_factor)
         return dataclasses.replace(ecfg, n_epochs=iters), iters
 
+    # ------------------------------------------------------------ health
+    def health(self) -> Dict[str, object]:
+        """One-call serving/ingest health report.
+
+        ``serving`` is True once a refresh has committed a snapshot;
+        ``coverage`` / ``lost_shards`` / ``hh_error_bound`` reflect any
+        degradation absorbed by :meth:`update_shards`; ``last_refresh``
+        records the most recent refresh outcome (including failures the
+        transactional swap rolled back)."""
+        c = self._cache
+        return {
+            "serving": c is not None,
+            "n_reps": int(c.rep_y.shape[0]) if c is not None else 0,
+            "points": float(self.state.count),
+            "pending_fraction": self.pending_fraction(),
+            "needs_refresh": self.needs_refresh(),
+            "hh_error_bound": self.error_bound(),
+            "coverage": self.coverage(),
+            "lost_shards": self._lost_shards,
+            "update_retries": self._update_retries,
+            "refreshes": self._refreshes,
+            "refresh_failures": self._refresh_failures,
+            "last_refresh": self._last_refresh,
+        }
+
     # --------------------------------------------------------- transform
     def transform(self, queries) -> np.ndarray:
         """Embed raw query points against the frozen served embedding —
         no optimizer.  (Q, D) → (Q, dims); one jitted chunked pass, peak
         memory O(transform_chunk · N_reps)."""
         if self._cache is None:
-            raise ValueError("transform() needs a served embedding; call "
-                             "refresh() first")
+            raise ServiceNotReadyError(
+                "transform() needs a served embedding; call "
+                "refresh() first")
         q = np.asarray(queries, np.float32)
         squeeze = q.ndim == 1
         if squeeze:
@@ -313,28 +484,47 @@ class SnsService:
     # ------------------------------------------------------- persistence
     def save(self, path) -> None:
         """Checkpoint the live fold AND the serving snapshot to one
-        ``.npz`` (via ``stream.save_state`` extras)."""
-        extra = {"pending": np.float64(self._pending)}
+        ``.npz`` (via ``stream.save_state`` extras).  The write is atomic
+        and checksummed, and the previous checkpoint generation rotates
+        to ``<path>.npz.bak`` — :meth:`load` falls back to it if this
+        write is later found torn or corrupted."""
+        if self._cache is None:
+            raise ServiceNotReadyError(
+                "save() checkpoints the serving snapshot; call refresh() "
+                "first (to checkpoint a fold alone, use stream.save_state "
+                "on .state)")
+        extra = {"pending": np.float64(self._pending),
+                 "lost_mass": np.float64(self._lost_mass),
+                 "lost_shards": np.asarray(self._lost_shards, np.int64),
+                 "update_retries": np.int64(self._update_retries)}
         c = self._cache
-        if c is not None:
-            extra.update(
-                rep_cell=c.rep_cell, rep_slot=c.rep_slot,
-                rep_x=np.asarray(c.rep_x), rep_y=np.asarray(c.rep_y),
-                rep_w=c.rep_w, rep_ids=c.rep_ids,
-                min_hh_count=np.float64(c.min_hh_count))
-        stream_mod.save_state(self.state, path, extra=extra)
+        extra.update(
+            rep_cell=c.rep_cell, rep_slot=c.rep_slot,
+            rep_x=np.asarray(c.rep_x), rep_y=np.asarray(c.rep_y),
+            rep_w=c.rep_w, rep_ids=c.rep_ids,
+            min_hh_count=np.float64(c.min_hh_count))
+        stream_mod.save_state(self.state, path, extra=extra,
+                              keep_backup=True)
 
     @classmethod
     def load(cls, path, cfg: SnsConfig, grid: GridSpec, *,
              tsne_cfg=None, umap_cfg=None,
              service_cfg: Optional[ServiceConfig] = None) -> "SnsService":
         """Resurrect a service from :meth:`save` — the fold continues and
-        the served embedding (if one was cached) serves immediately."""
+        the served embedding (if one was cached) serves immediately.
+        Checksums are verified; if the newest checkpoint is corrupt the
+        ``.bak`` generation (rotated by :meth:`save`) is loaded instead
+        (``stream.load_state(fallback=True)``)."""
         svc = cls(cfg, grid, tsne_cfg=tsne_cfg, umap_cfg=umap_cfg,
                   service_cfg=service_cfg)
-        state, extras = stream_mod.load_state(path, with_extra=True)
+        state, extras = stream_mod.load_state(path, with_extra=True,
+                                              fallback=True)
         svc.state = state
         svc._pending = float(extras.get("pending", 0.0))
+        svc._lost_mass = float(extras.get("lost_mass", 0.0))
+        svc._lost_shards = tuple(
+            int(s) for s in extras.get("lost_shards", ()))
+        svc._update_retries = int(extras.get("update_retries", 0))
         if "rep_y" in extras:
             svc._cache = EmbedCache(
                 rep_cell=extras["rep_cell"].astype(np.uint64),

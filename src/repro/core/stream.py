@@ -35,7 +35,17 @@ count exceeds every eviction it suffered survives; see
 
 ``save_state`` / ``load_state`` checkpoint the fold mid-stream (resumable
 ingest): the state is a flat pytree of arrays, round-tripped through one
-``.npz`` — resuming reproduces bit-identical heavy hitters.
+``.npz`` — resuming reproduces bit-identical heavy hitters.  Writes are
+ATOMIC (temp file + ``os.replace``: a crash mid-save can never leave a
+torn file at the target path) and CHECKSUMMED (a crc32 digest rides in
+the payload; ``load_state`` recomputes it and raises
+:class:`CheckpointCorruptError` on silent bit rot, optionally falling
+back to the previous good generation written by ``keep_backup=True``).
+
+``merge_states`` is the host-level mergeability primitive: two folds
+built with identical hash params combine linearly (sketch tables add,
+reservoirs sorted-merge, counts add, eviction watermarks max) — the
+partial-aggregation backbone of ``core.resilience``.
 
 Used by the single-host streaming pipeline (``pipeline.run_streaming``)
 and, via ``ingest_step`` inside ``lax.scan``, by the mesh streaming path
@@ -45,6 +55,7 @@ from __future__ import annotations
 
 import functools
 import os
+import zlib
 from typing import Iterable, Iterator, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -242,6 +253,44 @@ def ingest_all(state: IngestState, grid: GridSpec,
     return state
 
 
+def merge_states(a: IngestState, b: IngestState) -> IngestState:
+    """Linear merge of two ingest folds built with IDENTICAL hash params
+    (the paper's same-hash-functions contract — checked by table shape;
+    value equality is the caller's responsibility, exactly as in
+    ``sketch.merge``): sketch tables add, candidate reservoirs combine
+    through the sort-free sorted merge (``b``'s reservoir re-keyed as
+    runs via ``candidates.runs_from_candidates``), counts add, and the
+    eviction watermarks max — including anything evicted by THIS merge,
+    so the space-saving diagnostic stays a true upper bound.
+
+    This is the host-level aggregation primitive: what ``psum`` does
+    inside ``shard_map``, done between independently-built shard states —
+    the backbone of partial aggregation (``resilience.collect_shards``),
+    where exactly the shards that delivered are merged and the rest are
+    accounted as lost mass."""
+    if a.sketch.table.shape != b.sketch.table.shape:
+        raise ValueError(
+            f"cannot merge sketches of different geometry: "
+            f"{a.sketch.table.shape} vs {b.sketch.table.shape}")
+    # merge_runs' clamped gathers assume jnp semantics — host-side states
+    # (device_get'd shard results, loaded checkpoints) arrive as numpy,
+    # where an out-of-range index raises instead of clamping
+    a = jax.tree_util.tree_map(jnp.asarray, a)
+    b = jax.tree_util.tree_map(jnp.asarray, b)
+    runs = cand_mod.runs_from_candidates(b.cands)
+    cands, evicted = cand_mod.merge_runs(a.cands, runs, a.cands.capacity)
+    return IngestState(
+        sketch=sketch_mod.merge(a.sketch, b.sketch),
+        cands=cands,
+        count=a.count + b.count,
+        evict_max=jnp.maximum(jnp.maximum(a.evict_max, b.evict_max),
+                              evicted))
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed to parse or failed its checksum."""
+
+
 def _npz_path(path) -> str:
     """np.savez appends '.npz' to suffix-less paths but np.load does not —
     normalize so save/load accept the same path string."""
@@ -249,12 +298,50 @@ def _npz_path(path) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
-def save_state(state: IngestState, path, extra=None) -> None:
+def backup_path(path) -> str:
+    """The previous-good-generation file ``save_state(keep_backup=True)``
+    rotates to (``<path>.npz.bak``)."""
+    return _npz_path(path) + ".bak"
+
+
+def _payload_crc(payload: dict) -> int:
+    """crc32 over (name, bytes) of every array, in sorted-name order —
+    the integrity digest stored inside the checkpoint itself."""
+    crc = 0
+    for k in sorted(payload):
+        if k == "checksum_crc32":
+            continue
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(payload[k]).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
+def state_digest(state: IngestState) -> int:
+    """crc32 fingerprint of a fold's arrays — computed at the source,
+    verified on arrival (``resilience.collect_shards(verify=True)``), so
+    a bit flipped in transit is detected instead of silently merged."""
+    crc = 0
+    for leaf in jax.tree_util.tree_leaves(state):
+        crc = zlib.crc32(
+            np.ascontiguousarray(np.asarray(leaf)).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
+def save_state(state: IngestState, path, extra=None,
+               keep_backup: bool = False) -> None:
     """Checkpoint the ingest fold mid-stream to one ``.npz`` (resumable
     ingest; a missing ``.npz`` suffix is added).  Everything the fold
     carries — sketch table, hash params, reservoir, count, eviction
     watermark — round-trips exactly, so resuming reproduces bit-identical
     heavy hitters.
+
+    Crash safety: the payload is written to a temp file in the target
+    directory and moved into place with ``os.replace`` — readers see the
+    old complete file or the new complete file, never a torn one.  A
+    crc32 over every array travels inside the payload; ``load_state``
+    verifies it.  ``keep_backup=True`` first rotates an existing
+    checkpoint to :func:`backup_path` — the previous good generation
+    ``load_state(fallback=True)`` falls back to.
 
     ``extra`` (optional str → array mapping) rides along under
     ``extra_``-prefixed keys — how the service persists its embed cache
@@ -273,27 +360,82 @@ def save_state(state: IngestState, path, extra=None) -> None:
             raise ValueError(f"extra keys must be non-empty strings; "
                              f"got {k!r}")
         payload["extra_" + k] = np.asarray(v)
-    np.savez(_npz_path(path), **payload)
+    payload["checksum_crc32"] = np.uint32(_payload_crc(payload))
+    target = _npz_path(path)
+    tmp = target + f".tmp.{os.getpid()}"
+    try:
+        # savez on an OPEN FILE OBJECT never appends a suffix, so the
+        # temp name is exactly what os.replace moves
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        if keep_backup and os.path.exists(target):
+            os.replace(target, backup_path(path))
+        os.replace(tmp, target)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
-def load_state(path, with_extra: bool = False):
+def _load_npz(p: str, with_extra: bool):
+    """One checkpoint file → state (+extras), verifying the checksum.
+    Raises :class:`CheckpointCorruptError` on ANY parse or digest
+    failure — a torn zip, a missing field, a flipped bit."""
+    try:
+        with np.load(p) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:                               # noqa: BLE001
+        raise CheckpointCorruptError(
+            f"checkpoint {p!r} unreadable: {type(e).__name__}: {e}") from e
+    stored = arrays.pop("checksum_crc32", None)
+    if stored is not None and int(stored) != _payload_crc(arrays):
+        raise CheckpointCorruptError(
+            f"checkpoint {p!r} failed its crc32 check (bit rot or a "
+            f"partial overwrite)")
+    try:
+        params = hashing.MulShiftParams(
+            *(jnp.asarray(arrays["hash_params"][i]) for i in range(6)))
+        state = IngestState(
+            sketch=CountSketch(table=jnp.asarray(arrays["table"]),
+                               params=params),
+            cands=Candidates(
+                key_hi=jnp.asarray(arrays["cand_key_hi"]),
+                key_lo=jnp.asarray(arrays["cand_key_lo"]),
+                count=jnp.asarray(arrays["cand_count"]),
+                mask=jnp.asarray(arrays["cand_mask"])),
+            count=jnp.asarray(arrays["count"]),
+            evict_max=jnp.asarray(arrays["evict_max"]))
+    except (KeyError, IndexError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {p!r} missing/malformed fields: {e}") from e
+    if not with_extra:
+        return state
+    extras = {k[len("extra_"):]: arrays[k] for k in arrays
+              if k.startswith("extra_")}
+    return state, extras
+
+
+def load_state(path, with_extra: bool = False, fallback: bool = False):
     """Inverse of :func:`save_state`.  With ``with_extra=True`` returns
     ``(state, extras)`` where extras maps the un-prefixed ``extra=`` keys
-    saved alongside (empty dict if none)."""
-    with np.load(_npz_path(path)) as z:
-        params = hashing.MulShiftParams(
-            *(jnp.asarray(z["hash_params"][i]) for i in range(6)))
-        state = IngestState(
-            sketch=CountSketch(table=jnp.asarray(z["table"]), params=params),
-            cands=Candidates(
-                key_hi=jnp.asarray(z["cand_key_hi"]),
-                key_lo=jnp.asarray(z["cand_key_lo"]),
-                count=jnp.asarray(z["cand_count"]),
-                mask=jnp.asarray(z["cand_mask"])),
-            count=jnp.asarray(z["count"]),
-            evict_max=jnp.asarray(z["evict_max"]))
-        if not with_extra:
-            return state
-        extras = {k[len("extra_"):]: z[k] for k in z.files
-                  if k.startswith("extra_")}
-        return state, extras
+    saved alongside (empty dict if none).
+
+    Integrity: the stored crc32 is recomputed over every array —
+    mismatch, torn file, or missing fields raise
+    :class:`CheckpointCorruptError` (checkpoints predating the checksum
+    load without verification).  ``fallback=True`` then tries the
+    previous good generation at :func:`backup_path` before giving up —
+    the crash-safe pairing of ``save_state(keep_backup=True)``."""
+    tried = [_npz_path(path)]
+    if fallback:
+        tried.append(backup_path(path))
+    errors = []
+    for p in tried:
+        if not os.path.exists(p):
+            errors.append(f"{p!r}: not found")
+            continue
+        try:
+            return _load_npz(p, with_extra)
+        except CheckpointCorruptError as e:
+            errors.append(str(e))
+    raise CheckpointCorruptError(
+        "no loadable checkpoint: " + "; ".join(errors))

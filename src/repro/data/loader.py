@@ -43,34 +43,74 @@ class ShardedLoader:
 
     ``make_batch(shard_id, batch_idx)`` generates data purely from ids —
     works for synthetic generators and for file-backed shards alike.
+
+    Fault handling: ``on_error(shard, exc) -> bool`` (optional) is
+    consulted when ``make_batch`` raises.  Returning True SKIPS the shard
+    — it is recorded in ``self.failed``, left out of ``completed`` (so a
+    shared completion board lets another host's steal pass rescue it),
+    and NONE of its batches are delivered: with a handler installed each
+    shard's batches are buffered and yielded only once the whole shard
+    materialized, so a mid-shard failure can never half-deliver (the
+    streaming fold downstream cannot un-ingest).  Returning False/None
+    re-raises (fail loud).  Without a handler, behavior is unchanged:
+    batches stream unbuffered and errors propagate.
     """
 
     def __init__(self, plan: ShardPlan, host: int,
                  make_batch: Callable[[int, int], dict],
                  batches_per_shard: int = 1,
-                 completed: Optional[Sequence[int]] = None):
+                 completed: Optional[Sequence[int]] = None,
+                 on_error: Optional[Callable[[int, Exception], bool]] = None):
         self.plan = plan
         self.host = host
         self.make_batch = make_batch
         self.batches_per_shard = batches_per_shard
         self.completed = set(completed or ())
+        self.on_error = on_error
+        self.failed: set = set()
+
+    def _shard_batches(self, shard: int) -> Iterator[tuple]:
+        """All-or-nothing delivery of one shard (see class docstring).
+        Yields nothing if the shard failed and the handler swallowed."""
+        if self.on_error is None:
+            for b in range(self.batches_per_shard):
+                yield shard, self.make_batch(shard, b)
+            return
+        try:
+            batches = [self.make_batch(shard, b)
+                       for b in range(self.batches_per_shard)]
+        except Exception as e:                           # noqa: BLE001
+            if self.on_error(shard, e):
+                self.failed.add(shard)
+                return
+            raise
+        for batch in batches:
+            yield shard, batch
 
     def __iter__(self) -> Iterator[tuple]:
         for shard in self.plan.shards_for(self.host):
             if shard in self.completed:
                 continue
-            for b in range(self.batches_per_shard):
-                yield shard, self.make_batch(shard, b)
-            self.completed.add(shard)
+            delivered = False
+            for pair in self._shard_batches(shard):
+                delivered = True
+                yield pair
+            if delivered or shard not in self.failed:
+                self.completed.add(shard)
 
     def steal(self, globally_completed: Sequence[int]) -> Iterator[tuple]:
         """After finishing the primary slice: process other hosts' leftovers
-        that nobody has completed yet (straggler pickup)."""
-        done = set(globally_completed) | self.completed
+        that nobody has completed yet (straggler pickup).  Failed shards
+        are skipped here too (and stay failed — this host's view of the
+        shard is broken; a DIFFERENT host's steal pass may still get it)."""
+        done = set(globally_completed) | self.completed | self.failed
         for shard in self.plan.steal_order(self.host):
             if shard in done:
                 continue
-            for b in range(self.batches_per_shard):
-                yield shard, self.make_batch(shard, b)
+            delivered = False
+            for pair in self._shard_batches(shard):
+                delivered = True
+                yield pair
             done.add(shard)
-            self.completed.add(shard)
+            if delivered or shard not in self.failed:
+                self.completed.add(shard)

@@ -141,3 +141,29 @@ def test_assign_points_to_hh_chunked_equivalence():
         got = pipeline.assign_points_to_hh(grid, hh, np.asarray(pts),
                                            chunk=chunk)
         np.testing.assert_array_equal(got, oneshot)
+
+
+def test_sns_config_fails_loud_at_construction():
+    """Bad knobs raise at SnsConfig() time with every violation listed —
+    not as a shape error three stages into a trace."""
+    for bad, frag in ((dict(bins=1), "bins"),
+                      (dict(rows=0), "rows"),
+                      (dict(log2_cols=0), "log2_cols"),
+                      (dict(log2_cols=40), "log2_cols"),
+                      (dict(top_k=0), "top_k"),
+                      (dict(candidate_pool=-1), "candidate_pool"),
+                      (dict(ingest_chunk=0), "ingest_chunk"),
+                      (dict(embedder="pca"), "embedder"),
+                      (dict(embed_backend="cuda"), "embed_backend"),
+                      (dict(max_replicas=0), "max_replicas"),
+                      (dict(jitter_frac=2.0), "jitter_frac"),
+                      (dict(embed_grid=1), "embed_grid"),
+                      (dict(embed_grid_max=8, embed_grid=128),
+                       "embed_grid_max")):
+        with pytest.raises(ValueError, match=frag):
+            pipeline.SnsConfig(**bad)
+    # several violations at once: all reported in one message
+    with pytest.raises(ValueError) as ei:
+        pipeline.SnsConfig(bins=0, rows=0, top_k=0)
+    msg = str(ei.value)
+    assert "bins" in msg and "rows" in msg and "top_k" in msg

@@ -1,0 +1,231 @@
+"""Resilience layer: retries, straggler cutoff, partial aggregation.
+
+The load-bearing claims, each pinned here:
+
+* bounded retry with deterministic backoff rescues transient faults and
+  fails loud (``RetryError``) on permanent ones;
+* digest verification catches in-transit corruption and retries it;
+* an all-healthy collection is BIT-IDENTICAL to ingesting the same data
+  through independent shards and merging — resilience costs nothing when
+  nothing fails;
+* partial aggregation after loss equals the fold of exactly the
+  surviving sub-stream (CountSketch linearity), with coverage and the
+  widened error bound quantifying the damage;
+* the widened heavy-hitter bound is MONOTONE: losing more shards never
+  shrinks it (given true expected per-shard counts);
+* ``min_coverage`` / zero survivors fail loud with ``CoverageError``.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import faults, geo, quantize, resilience
+from repro.core import heavy_hitters as hh_mod
+from repro.core import stream
+from repro.core.faults import FaultPlan
+from repro.core.resilience import (CoverageError, IntegrityError,
+                                   RetryError, RetryPolicy)
+
+ROWS, LOG2_COLS, POOL, TOP_K = 4, 10, 256, 32
+N_SHARDS, PER_SHARD, DIMS = 6, 300, 3
+
+FAST = RetryPolicy(max_attempts=3, base_delay=0.001, max_delay=0.01)
+
+
+def _shard_data():
+    rng = np.random.RandomState(0)
+    return {s: [(rng.randn(PER_SHARD, DIMS) * 0.05
+                 + (s % 3)).astype(np.float32)]
+            for s in range(N_SHARDS)}
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return quantize.fit_grid(
+        np.concatenate([c for v in _shard_data().values() for c in v]), 8)
+
+
+def _extract(grid, data, **kw):
+    return geo.resilient_extract(
+        grid, data, rows=ROWS, log2_cols=LOG2_COLS, top_k=TOP_K,
+        candidate_pool=POOL, seed=0, chunk_size=128,
+        policy=kw.pop("policy", FAST), **kw)
+
+
+def _live_hh(hh):
+    m = np.asarray(hh.mask).astype(bool)
+    keys = (np.asarray(hh.key_hi, np.uint64)[m] << np.uint64(32)) \
+        | np.asarray(hh.key_lo, np.uint64)[m]
+    order = np.argsort(keys)
+    return keys[order], np.asarray(hh.count)[m][order]
+
+
+# --------------------------------------------------------------- retry unit
+def test_retry_policy_validates():
+    for bad in (dict(max_attempts=0), dict(multiplier=0.5),
+                dict(jitter=2.0), dict(attempt_timeout=0.0),
+                dict(base_delay=-1.0)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+
+
+def test_backoff_deterministic_bounded():
+    p = RetryPolicy(base_delay=0.1, multiplier=2.0, max_delay=0.5,
+                    jitter=0.5)
+    for attempt in range(6):
+        d1 = p.backoff(attempt, seed=3)
+        d2 = p.backoff(attempt, seed=3)
+        assert d1 == d2                      # deterministic
+        raw = min(0.1 * 2.0 ** attempt, 0.5)
+        assert raw * 0.5 <= d1 <= raw * 1.5  # jitter stays in ±50%
+    assert p.backoff(0, seed=1) != p.backoff(0, seed=2)
+
+
+def test_call_with_retry_rescues_transient():
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    out, attempts = resilience.call_with_retry(flaky, FAST)
+    assert out == "ok" and attempts == 3
+
+
+def test_call_with_retry_exhausts_loudly():
+    def dead():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RetryError) as ei:
+        resilience.call_with_retry(dead, FAST)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+def test_check_failure_counts_as_attempt():
+    """A delivery that fails its integrity check retries like any fault."""
+    calls = [0]
+
+    def job():
+        calls[0] += 1
+        return calls[0]
+
+    def check(v):
+        if v < 2:
+            raise IntegrityError("bad digest")
+
+    out, attempts = resilience.call_with_retry(job, FAST, check=check)
+    assert out == 2 and attempts == 2
+
+
+# ------------------------------------------------------------ the collector
+def test_all_healthy_collection_is_lossless(grid):
+    """No faults → coverage 1, no retries burned, and the extracted HHs
+    are bit-identical to a second run (pure function of the data)."""
+    r1 = _extract(grid, _shard_data())
+    r2 = _extract(grid, _shard_data())
+    assert r1.coverage == 1.0 and r1.lost == () and r1.retries == 0
+    assert r1.observed_count == N_SHARDS * PER_SHARD
+    k1, c1 = _live_hh(r1.hh)
+    k2, c2 = _live_hh(r2.hh)
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(c1, c2)
+
+
+def test_partial_merge_equals_fold_of_survivors(grid):
+    """Subset consistency (CountSketch linearity): drop shard 2 and the
+    extraction equals running on the surviving shards alone."""
+    data = _shard_data()
+    lossy = _extract(grid, data, faults=FaultPlan(seed=0, drop_shards=(2,)))
+    survivors = {s: v for s, v in data.items() if s != 2}
+    clean = _extract(grid, survivors)
+    assert lossy.lost == (2,)
+    assert lossy.observed_count == clean.observed_count
+    kl, cl = _live_hh(lossy.hh)
+    kc, cc = _live_hh(clean.hh)
+    np.testing.assert_array_equal(kl, kc)
+    np.testing.assert_array_equal(cl, cc)
+
+
+def test_flaky_shards_are_rescued_by_retry(grid):
+    """Transient failures burn retries but lose nothing."""
+    res = _extract(grid, _shard_data(), faults=FaultPlan(seed=1, flaky=0.5))
+    assert res.coverage == 1.0 and res.lost == ()
+    assert res.retries > 0
+
+
+def test_straggler_cutoff(grid):
+    """A shard sleeping past the deadline is abandoned, not awaited."""
+    data = _shard_data()
+    plan = FaultPlan(seed=0, drop_shards=(), delay=0.0)
+    slow = {s: v for s, v in data.items()}
+
+    def sleepy(chunks=data[4]):
+        time.sleep(6.0)   # modest: the abandoned thread is joined at
+        return list(chunks)  # interpreter exit (non-daemon executors)
+
+    slow[4] = sleepy
+    t0 = time.monotonic()
+    res = _extract(grid, slow, faults=plan, deadline=1.5,
+                   policy=RetryPolicy(max_attempts=1))
+    assert time.monotonic() - t0 < 5.0       # did not wait out the sleep
+    assert 4 in res.lost
+    st = {s.shard: s for s in res.statuses}[4]
+    assert st.error == "deadline" and not st.ok
+    assert res.coverage < 1.0
+
+
+def test_min_coverage_fails_loud(grid):
+    with pytest.raises(CoverageError, match="coverage"):
+        _extract(grid, _shard_data(),
+                 faults=FaultPlan(seed=0, drop_shards=(0, 1, 2)),
+                 min_coverage=0.9)
+
+
+def test_zero_survivors_fails_loud(grid):
+    with pytest.raises(CoverageError, match="no shard"):
+        _extract(grid, _shard_data(),
+                 faults=FaultPlan(seed=0,
+                                  drop_shards=tuple(range(N_SHARDS))))
+
+
+def test_digest_verification_catches_corruption(grid):
+    """corrupt=1.0 flips a bit in every delivered state AFTER its digest
+    was computed; verify=True must reject every delivery → zero shards
+    survive their retry budgets."""
+    with pytest.raises(CoverageError):
+        _extract(grid, _shard_data(),
+                 faults=FaultPlan(seed=0, corrupt=1.0),
+                 policy=RetryPolicy(max_attempts=2, base_delay=0.001))
+
+
+# ------------------------------------------------- degradation properties
+def test_error_bound_monotone_under_widening_loss(grid):
+    """Dropping MORE shards never shrinks the widened bound (with true
+    per-shard expected counts): bound = max survivor watermark + lost
+    mass, and a newly lost shard adds expected_t >= its own watermark."""
+    data = _shard_data()
+    expected = {s: float(PER_SHARD) for s in range(N_SHARDS)}
+    for chain_seed in range(3):
+        order = np.random.RandomState(chain_seed).permutation(N_SHARDS)
+        prev = -np.inf
+        for k in range(N_SHARDS):            # nested masks, one more each
+            mask = tuple(int(s) for s in order[:k])
+            res = _extract(grid, data, expected_counts=expected,
+                           faults=FaultPlan(seed=0, drop_shards=mask))
+            assert res.hh_error_bound >= prev, \
+                f"bound shrank at mask {mask} (chain seed {chain_seed})"
+            assert res.coverage == pytest.approx(1.0 - k / N_SHARDS)
+            prev = res.hh_error_bound
+
+
+def test_lost_mass_estimated_without_expected_counts(grid):
+    """No expected_counts → lost mass estimated as the mean observed
+    shard mass (here exact: equal shards)."""
+    res = _extract(grid, _shard_data(),
+                   faults=FaultPlan(seed=0, drop_shards=(1,)))
+    assert res.coverage == pytest.approx((N_SHARDS - 1) / N_SHARDS)
+    assert res.hh_error_bound >= PER_SHARD   # the estimated lost mass

@@ -168,3 +168,62 @@ def test_umap_service_end_to_end(data):
     assert 5 * warm.n_iters <= cold.n_iters
     y = svc.transform(pts[:100])
     assert y.shape == (100, 2) and np.isfinite(y).all()
+
+
+# ------------------------------------------------------- failure semantics
+def test_service_config_fails_loud():
+    for bad in (dict(refresh_drift=1.5), dict(error_ratio=-0.1),
+                dict(warm_factor=0), dict(transform_k=0),
+                dict(transform_eps=0.0)):
+        with pytest.raises(ValueError, match="invalid ServiceConfig"):
+            ServiceConfig(**bad)
+
+
+def test_not_ready_guards(data):
+    """transform()/save() before the first refresh raise
+    ServiceNotReadyError (a ValueError, so legacy except clauses hold)."""
+    from repro.core.service import ServiceNotReadyError
+
+    pts, _ = data
+    svc = SnsService(CFG, quantize.fit_grid(pts, CFG.bins),
+                     tsne_cfg=TC, service_cfg=SCFG)
+    assert issubclass(ServiceNotReadyError, ValueError)
+    with pytest.raises(ServiceNotReadyError, match="refresh"):
+        svc.transform(pts[:4])
+    with pytest.raises(ServiceNotReadyError, match="refresh"):
+        svc.save("/tmp/never-written")
+    h = svc.health()
+    assert not h["serving"] and h["refreshes"] == 0
+
+
+def test_health_report_after_clean_episode(scenario):
+    svc = scenario[0]
+    h = svc.health()
+    assert h["serving"] and h["n_reps"] > 0
+    assert h["coverage"] == 1.0 and h["lost_shards"] == ()
+    assert h["refreshes"] >= 2
+    assert h["hh_error_bound"] >= 0.0
+    assert h["last_refresh"]["ok"] and h["last_refresh"]["seconds"] > 0
+
+
+def test_failed_refresh_rolls_back(scenario, monkeypatch):
+    """A refresh that dies mid-embed must leave the previous snapshot
+    serving (transactional swap) and show up in health()."""
+    svc = scenario[0]
+    before = np.asarray(svc._cache.rep_y).copy()
+    fails_before = svc.health()["refresh_failures"]
+
+    def boom(*a, **k):
+        raise RuntimeError("embed exploded")
+
+    monkeypatch.setattr(pipeline, "embed_points", boom)
+    with pytest.raises(RuntimeError, match="embed exploded"):
+        svc.refresh()
+    monkeypatch.undo()
+    h = svc.health()
+    assert h["serving"]
+    assert h["refresh_failures"] == fails_before + 1
+    assert h["last_refresh"]["ok"] is False
+    assert "embed exploded" in h["last_refresh"]["error"]
+    # the served snapshot is byte-identical to the pre-failure one
+    np.testing.assert_array_equal(np.asarray(svc._cache.rep_y), before)
