@@ -9,7 +9,9 @@ Emits CSV blocks (name, value, paper reference) for:
   * hh_coverage          — paper §IV (cumulative HH mass)
   * collision_model      — paper §III-2 (grid-resolution guidance)
   * pipeline_quality     — paper §IV-1 (contingency-table analog)
-  * kernel_paths         — update/estimate implementation comparison
+  * kernel_paths         — per-op kernel-tier microbench: every registry
+                           op timed compiled vs interpret vs XLA ref
+                           (--fast runs the numeric smoke gate)
   * embed_scaling        — dense vs tiled vs sparse embedding memory/time vs N
   * embed_throughput     — tSNE gradient iters/sec (dense/tiled/sparse) +
                            UMAP epochs/sec (scatter baseline vs scatter-free)
@@ -64,7 +66,9 @@ def build_jobs(fast: bool):
         ("collision_model", "bench_collision_model", lambda m: m.run()),
         ("pipeline_quality", "bench_pipeline_quality",
          lambda m: m.run(n_small)),
-        ("kernel_paths", "bench_kernels", lambda m: m.run()),
+        ("kernel_paths", "bench_kernels", lambda m: (
+            m.run(smoke=True, json_out="BENCH_kernels_ci.json") if fast
+            else m.run(json_out=m.DEFAULT_JSON))),
         ("embed_scaling", "bench_embed_scaling", lambda m: m.run(
             sizes=(4096, 8192) if fast else (8192, 16384, 32768, 65536),
             dense_max=8192 if fast else 16384,
@@ -118,7 +122,14 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of each bench's "
+                         "timed region into DIR/<bench> (opt-in; "
+                         "profiling overhead perturbs timings, so never "
+                         "set this for baseline runs)")
     args = ap.parse_args()
+
+    from benchmarks.common import maybe_trace
 
     jobs = build_jobs(args.fast)
     names = [name for name, _, _ in jobs]
@@ -132,7 +143,8 @@ def main() -> None:
         mod = _load(module)
         t0 = time.time()
         try:
-            print(runner(mod))
+            with maybe_trace(args.trace, name):
+                print(runner(mod))
             print(f"# [{name} done in {time.time() - t0:.1f}s]\n",
                   flush=True)
         except Exception as e:                               # noqa: BLE001

@@ -7,6 +7,22 @@ Sketch → heavy hitters → weighted jittered representatives → UMAP (or
 tSNE) → cluster summary.  Prints coverage and HH statistics, and writes
 the 2-D embedding to /tmp/sns_embedding.csv.
 
+Kernel tiers: every Pallas call site dispatches through
+`repro.kernels.registry`, picking the best tier the current backend
+supports (`SnsConfig.kernel_mode="auto"`, overridable per run or via
+the `SNS_KERNEL_MODE` env var):
+
+    tier       | what runs                        | where
+    -----------+----------------------------------+--------------------
+    compiled   | Mosaic/Triton-compiled Pallas    | TPU/GPU only
+    interpret  | Python-level Pallas execution    | any backend
+    xla        | pure-jnp reference               | any backend
+
+Auto-resolution walks compiled → interpret → xla; the sorted-COO
+segment-reduce prefers its XLA cumsum on CPU (nothing beats it there)
+while the fused kernel takes over on accelerators.  Force a tier with
+e.g. ``SNS_KERNEL_MODE=xla python examples/quickstart.py``.
+
 This is the one-shot front-end.  For data that keeps arriving, the
 long-lived service API (`core.service.SnsService`) wraps the same
 stages behind `update(chunks)` (incremental ingest), `refresh()`

@@ -58,12 +58,16 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import coo
 from repro.core import mesh as mesh_mod
 from repro.kernels import knn_tile
 
-_KEY_MAX = jnp.uint32(0xFFFFFFFF)
+# numpy, not jnp: module import may happen lazily inside a jit trace
+# (neighbors dispatch), and a jnp constant created there would be a
+# tracer leaking into every later trace
+_KEY_MAX = np.uint32(0xFFFFFFFF)
 _TILE_CHUNK = 8          # sorted tiles scored per lax.map step (stage 1)
 
 
@@ -107,6 +111,10 @@ class AnnConfig:
     block: int = 4096
     tile: str = "xla"
     interpret: bool = True
+    # registry dispatch mode for the stage-1 distance kernel (op
+    # "knn_dist_tiles"); None defers to tile/interpret above (plus any
+    # process-level SNS_KERNEL_MODE pin), a string forces one mode
+    kernel_mode: Optional[str] = None
     auto_threshold: int = 1 << 16
     seed: int = 0
 
@@ -207,7 +215,8 @@ def _tiles_topk(qx, qid, cx, cid, k: int, cfg: AnnConfig,
     def step(args):
         tqx, tqid, tcx, tcid = args
         d2 = knn_tile.distance_tiles(tqx, tqid, tcx, tcid,
-                                     tile=cfg.tile, interpret=cfg.interpret)
+                                     tile=cfg.tile, interpret=cfg.interpret,
+                                     mode=cfg.kernel_mode)
         neg, pos = jax.lax.top_k(-d2, k)                     # (chunk, B, k)
         idx = jnp.take_along_axis(
             jnp.broadcast_to(tcid[:, None, :], d2.shape), pos, axis=2)

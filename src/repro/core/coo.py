@@ -37,7 +37,7 @@ one-time setup, never inside the per-iteration jaxpr.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,8 @@ def row_bounds(sorted_ids: jnp.ndarray, n: int) -> jnp.ndarray:
                             jnp.arange(n + 1)).astype(jnp.int32)
 
 
-def segment_reduce(vals: jnp.ndarray, bounds: jnp.ndarray) -> jnp.ndarray:
+def segment_reduce(vals: jnp.ndarray, bounds: jnp.ndarray,
+                   mode: Optional[str] = None) -> jnp.ndarray:
     """Per-row sums of row-sorted per-edge values — WITHOUT scatter.
 
     ``vals`` is (E,) or (E, D), ordered so that row i's entries occupy
@@ -60,7 +61,27 @@ def segment_reduce(vals: jnp.ndarray, bounds: jnp.ndarray) -> jnp.ndarray:
     Σ over a row = cumsum difference at the row boundaries: one vectorized
     O(E) pass, versus XLA CPU scatter's serial update walk (~100× slower
     at E ~ 10⁷).  Returns (N,) or (N, D).
+
+    ``mode`` routes through the kernel registry (op ``segment_reduce``):
+    None or "xla" keeps the cumsum-difference path below (the CPU
+    default, unless the process pins another mode via SNS_KERNEL_MODE /
+    a registry override); "interpret"/"compiled" run the fused Pallas
+    kernel (``kernels.segment_reduce``), "auto" resolves per backend —
+    on accelerators that picks the fused kernel, on CPU it falls back
+    to the cumsum path.
     """
+    if mode is None or mode == "auto":
+        from repro.kernels import registry
+        pinned = registry.resolve_mode(None, "segment_reduce")
+        mode = pinned if pinned != "auto" else mode
+    if mode not in (None, "xla"):
+        from repro.kernels import registry
+        impl = registry.resolve("segment_reduce", mode=mode,
+                                shape=vals.shape, dtype=vals.dtype)
+        if impl.mode != "xla":
+            return impl.fn(vals, bounds,
+                           **registry.tile_params("segment_reduce",
+                                                  shape=vals.shape))
     zero = jnp.zeros((1,) + vals.shape[1:], vals.dtype)
     cs = jnp.concatenate([zero, jnp.cumsum(vals, axis=0)])
     return cs[bounds[1:]] - cs[bounds[:-1]]

@@ -85,6 +85,12 @@ class SnsConfig:
     # embedders under shard_map (sparse tSNE only — see tsne.run_tsne);
     # collective contract in core.mesh
     embed_mesh: object = None      # None | int | jax.sharding.Mesh
+    # Pallas kernel dispatch tier for the embed stage (kernels.registry):
+    # "auto" = compiled → interpret → xla for the current backend;
+    # "compiled"|"interpret"|"xla" force one tier for every registry op
+    # (cic splat/gather, tSNE force tile, kNN distance scan, the fused
+    # segment-reduce).  CPU CI pins interpret/xla; accelerators keep auto.
+    kernel_mode: str = "auto"
     seed: int = 0
 
     def __post_init__(self):
@@ -140,6 +146,9 @@ class SnsConfig:
             (self.embed_knn_method in ("exact", "auto", "ann"),
              f"embed_knn_method must be 'exact'|'auto'|'ann', "
              f"got {self.embed_knn_method!r}"),
+            (self.kernel_mode in ("auto", "compiled", "interpret", "xla"),
+             f"kernel_mode must be 'auto'|'compiled'|'interpret'|'xla', "
+             f"got {self.kernel_mode!r}"),
         ]
         bad = [msg for ok, msg in checks if not ok]
         if bad:
@@ -281,6 +290,13 @@ def resolve_embed_cfg(cfg: SnsConfig, tsne_cfg=None, umap_cfg=None):
 
     SnsConfig is authoritative for the embedding backend/block — the
     tsne/umap cfgs carry algorithm hyper-parameters only."""
+    # a forced kernel tier also pins the ANN stage-1 distance kernel
+    # (AnnConfig.kernel_mode None = defer to its tile/interpret knobs)
+    ann_cfg = cfg.embed_ann
+    if cfg.kernel_mode != "auto":
+        from repro.core import ann as ann_mod
+        ann_cfg = dataclasses.replace(ann_cfg or ann_mod.AnnConfig(),
+                                      kernel_mode=cfg.kernel_mode)
     if cfg.embedder == "tsne":
         tc = tsne_cfg or tsne_mod.TsneConfig(dims=cfg.embed_dims)
         return dataclasses.replace(tc, backend=cfg.embed_backend,
@@ -290,14 +306,16 @@ def resolve_embed_cfg(cfg: SnsConfig, tsne_cfg=None, umap_cfg=None):
                                    grid_max=cfg.embed_grid_max,
                                    cic=cfg.embed_cic,
                                    knn_method=cfg.embed_knn_method,
-                                   ann=cfg.embed_ann)
+                                   ann=ann_cfg,
+                                   kernel_mode=cfg.kernel_mode)
     if cfg.embedder == "umap":
         # embed_block bounds the kNN row-block on the UMAP side too
         # (tests/test_umap_scatter_free.py pins the propagation)
         uc = umap_cfg or umap_mod.UmapConfig(dims=cfg.embed_dims)
         return dataclasses.replace(uc, block=cfg.embed_block,
                                    knn_method=cfg.embed_knn_method,
-                                   ann=cfg.embed_ann)
+                                   ann=ann_cfg,
+                                   kernel_mode=cfg.kernel_mode)
     raise ValueError(f"unknown embedder {cfg.embedder!r}")
 
 

@@ -66,13 +66,25 @@ class RetryPolicy:
     factor drawn deterministically from ``(seed, attempt)`` — chaos tests
     replay bit-for-bit.  ``attempt_timeout`` bounds one attempt's wall
     clock (the attempt's thread is abandoned, not killed — acceptable
-    for the I/O-bound shard fetches this guards)."""
+    for the I/O-bound shard fetches this guards).
+
+    Not every failure deserves a retry: a digest mismatch is transit
+    noise worth another fetch, but a corrupted checkpoint or a config
+    ``ValueError`` is deterministic — replaying it burns the whole
+    attempt budget (plus backoff sleeps) to reach the same exception.
+    ``retryable_exceptions`` is the allowlist; anything matching
+    ``non_retryable_exceptions`` fails IMMEDIATELY even if it also
+    matches the allowlist (deny wins).  ``non_retryable_exceptions=None``
+    means the default deny set: ``ValueError`` and
+    ``stream.CheckpointCorruptError``."""
     max_attempts: int = 3
     base_delay: float = 0.01
     multiplier: float = 2.0
     max_delay: float = 1.0
     jitter: float = 0.5                    # delay *= 1 ± U(0, jitter)
     attempt_timeout: Optional[float] = None
+    retryable_exceptions: Tuple[type, ...] = (Exception,)
+    non_retryable_exceptions: Optional[Tuple[type, ...]] = None
 
     def __post_init__(self):
         if self.max_attempts < 1:
@@ -86,6 +98,28 @@ class RetryPolicy:
             raise ValueError("RetryPolicy.jitter must be in [0, 1]")
         if self.attempt_timeout is not None and self.attempt_timeout <= 0:
             raise ValueError("RetryPolicy.attempt_timeout must be > 0")
+        for name in ("retryable_exceptions", "non_retryable_exceptions"):
+            excs = getattr(self, name)
+            if excs is None:
+                continue
+            if not all(isinstance(e, type) and issubclass(e, BaseException)
+                       for e in excs):
+                raise ValueError(
+                    f"RetryPolicy.{name} must be a tuple of exception "
+                    f"types, got {excs!r}")
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        """Should ``exc`` consume another attempt?  Deny-list wins over
+        the allow-list; the default deny set is resolved lazily so the
+        stream module (which defines CheckpointCorruptError) is only
+        imported when a failure actually needs classifying."""
+        deny = self.non_retryable_exceptions
+        if deny is None:
+            from repro.core.stream import CheckpointCorruptError
+            deny = (ValueError, CheckpointCorruptError)
+        if isinstance(exc, deny):
+            return False
+        return isinstance(exc, self.retryable_exceptions)
 
     def backoff(self, attempt: int, seed: int = 0) -> float:
         """Sleep before retry number ``attempt+1`` (deterministic)."""
@@ -119,24 +153,40 @@ def call_with_retry(fn: Callable[[], object],
                     policy: Optional[RetryPolicy] = None, *,
                     seed: int = 0,
                     check: Optional[Callable[[object], None]] = None,
-                    on_retry: Optional[Callable[[int, Exception], None]] = None
-                    ) -> Tuple[object, int]:
+                    on_retry: Optional[Callable[[int, Exception], None]] = None,
+                    on_attempt: Optional[
+                        Callable[[int, float, Optional[Exception]], None]]
+                    = None) -> Tuple[object, int]:
     """Call ``fn`` under ``policy``; returns ``(result, attempts_used)``.
 
     ``check(result)`` (optional) validates a delivery — raising (e.g.
     :class:`IntegrityError` on a digest mismatch) counts as a failed
     attempt, so corrupted deliveries are retried like any other fault.
-    After the final failure a :class:`RetryError` chains the cause."""
+    A failure the policy classifies non-retryable (``ValueError``,
+    ``CheckpointCorruptError`` by default — see
+    :meth:`RetryPolicy.is_retryable`) RE-RAISES immediately instead of
+    burning the remaining attempt budget.  ``on_attempt(attempt,
+    seconds, exc_or_None)`` (optional) observes every attempt's wall
+    clock — the collector's per-shard latency forensics hang off it.
+    After the final retryable failure a :class:`RetryError` chains the
+    cause."""
     policy = policy or RetryPolicy()
     last: Optional[Exception] = None
     for attempt in range(policy.max_attempts):
+        t_a = time.monotonic()
         try:
             out = _timed_call(fn, policy.attempt_timeout)
             if check is not None:
                 check(out)
+            if on_attempt is not None:
+                on_attempt(attempt, time.monotonic() - t_a, None)
             return out, attempt + 1
         except Exception as e:                           # noqa: BLE001
             last = e
+            if on_attempt is not None:
+                on_attempt(attempt, time.monotonic() - t_a, e)
+            if not policy.is_retryable(e):
+                raise
             if on_retry is not None:
                 on_retry(attempt, e)
             if attempt + 1 < policy.max_attempts:
@@ -154,6 +204,35 @@ class ShardStatus:
     attempts: int            # attempts actually made (0 = never finished)
     seconds: float           # wall clock from submit to verdict
     error: Optional[str]     # final error ('deadline' for stragglers)
+    # wall clock of each individual attempt, in order (len == attempts
+    # except for deadline stragglers, whose in-flight attempt never
+    # reports) — feeds the service's per-shard latency histograms
+    attempt_seconds: Tuple[float, ...] = ()
+
+
+# log-spaced attempt-latency buckets (seconds, upper bounds; the last
+# bucket is open).  Shared by the service's per-shard histograms so
+# health() payloads are comparable across deployments.
+LATENCY_BUCKET_EDGES: Tuple[float, ...] = (0.001, 0.01, 0.1, 1.0, 10.0)
+LATENCY_BUCKET_LABELS: Tuple[str, ...] = (
+    "<=1ms", "<=10ms", "<=100ms", "<=1s", "<=10s", ">10s")
+
+
+def latency_bucket(seconds: float) -> int:
+    """Index into :data:`LATENCY_BUCKET_LABELS` for one attempt."""
+    for i, edge in enumerate(LATENCY_BUCKET_EDGES):
+        if seconds <= edge:
+            return i
+    return len(LATENCY_BUCKET_EDGES)
+
+
+def latency_histogram(attempt_seconds: Sequence[float]) -> List[int]:
+    """Bucket counts (len == len(LATENCY_BUCKET_LABELS)) for a batch of
+    attempt wall-clocks."""
+    counts = [0] * len(LATENCY_BUCKET_LABELS)
+    for s in attempt_seconds:
+        counts[latency_bucket(float(s))] += 1
+    return counts
 
 
 @dataclasses.dataclass
@@ -232,19 +311,35 @@ def collect_shards(jobs: Mapping[int, Callable[[], object]], *,
         """Full retry loop for one shard — never raises; the verdict
         travels in the returned ShardStatus."""
         t0 = time.monotonic()
+        laps: List[float] = []
+
+        def lap(_attempt, secs, _exc):
+            laps.append(secs)
+
         try:
             out, attempts = call_with_retry(fn, policy, seed=shard,
-                                            check=checker)
+                                            check=checker, on_attempt=lap)
             state = out[0] if verify else out
             return state, ShardStatus(shard=shard, ok=True,
                                       attempts=attempts,
                                       seconds=time.monotonic() - t0,
-                                      error=None)
+                                      error=None,
+                                      attempt_seconds=tuple(laps))
         except RetryError as e:
             return None, ShardStatus(shard=shard, ok=False,
                                      attempts=policy.max_attempts,
                                      seconds=time.monotonic() - t0,
-                                     error=str(e))
+                                     error=str(e),
+                                     attempt_seconds=tuple(laps))
+        except Exception as e:                           # noqa: BLE001
+            # non-retryable (policy deny-list): failed on the attempt
+            # that raised — record it and degrade like any lost shard
+            return None, ShardStatus(shard=shard, ok=False,
+                                     attempts=len(laps),
+                                     seconds=time.monotonic() - t0,
+                                     error=f"non-retryable "
+                                           f"{type(e).__name__}: {e}",
+                                     attempt_seconds=tuple(laps))
 
     start = time.monotonic()
     shards = list(jobs)

@@ -195,6 +195,11 @@ class SnsService:
         self._lost_mass = 0.0          # estimated mass of dropped shards
         self._lost_shards: tuple = ()  # shard ids lost across updates
         self._update_retries = 0       # retry attempts spent in updates
+        # per-shard attempt-latency forensics accumulated across
+        # update_shards() calls: shard -> {attempts, failures, buckets}
+        # (buckets = counts per resilience.LATENCY_BUCKET_LABELS).
+        # Operational telemetry only — deliberately NOT checkpointed.
+        self._shard_latency: Dict[int, Dict[str, object]] = {}
         self._refreshes = 0
         self._refresh_failures = 0
         self._last_refresh: Optional[Dict[str, object]] = None
@@ -264,12 +269,28 @@ class SnsService:
         self._lost_shards = tuple(sorted(set(self._lost_shards)
                                          | set(agg.lost)))
         self._update_retries += agg.retries
+        self._fold_shard_latency(agg.statuses)
         return {"points": absorbed, "seconds": dt,
                 "points_per_sec": absorbed / dt if dt > 0 else 0.0,
                 "coverage": agg.coverage, "lost": list(agg.lost),
                 "retries": agg.retries,
                 "pending_fraction": self.pending_fraction(),
                 "needs_refresh": self.needs_refresh()}
+
+    def _fold_shard_latency(self, statuses) -> None:
+        """Accumulate per-shard attempt counts + latency buckets from one
+        collector pass into the running histograms (health() exposes
+        them).  Buckets are log-spaced per
+        ``resilience.LATENCY_BUCKET_LABELS``."""
+        nb = len(resilience.LATENCY_BUCKET_LABELS)
+        for st in statuses:
+            rec = self._shard_latency.setdefault(
+                int(st.shard), {"attempts": 0, "failures": 0,
+                                "buckets": [0] * nb})
+            rec["attempts"] += int(st.attempts)
+            rec["failures"] += 0 if st.ok else 1
+            hist = resilience.latency_histogram(st.attempt_seconds)
+            rec["buckets"] = [a + b for a, b in zip(rec["buckets"], hist)]
 
     def pending_fraction(self) -> float:
         """Fraction of all ingested mass not yet reflected in the served
@@ -448,6 +469,15 @@ class SnsService:
             "coverage": self.coverage(),
             "lost_shards": self._lost_shards,
             "update_retries": self._update_retries,
+            # per-shard latency forensics: attempt counts + log-spaced
+            # per-attempt wall-clock buckets (resilience.
+            # LATENCY_BUCKET_LABELS), accumulated over update_shards()
+            "shard_latency": {
+                s: {"attempts": rec["attempts"],
+                    "failures": rec["failures"],
+                    "buckets": dict(zip(resilience.LATENCY_BUCKET_LABELS,
+                                        rec["buckets"]))}
+                for s, rec in sorted(self._shard_latency.items())},
             "refreshes": self._refreshes,
             "refresh_failures": self._refresh_failures,
             "last_refresh": self._last_refresh,

@@ -82,6 +82,7 @@ import numpy as np
 
 from repro.core import coo
 from repro.core import mesh as mesh_mod
+from repro.kernels import registry as registry_mod
 
 BACKENDS = ("dense", "tiled", "pallas", "sparse")
 CIC_PATHS = ("xla", "pallas")
@@ -118,6 +119,11 @@ class TsneConfig:
     # ann.AnnConfig — hashable, so the config stays jit-static)
     knn_method: str = "auto"
     ann: Optional[object] = None
+    # kernel dispatch mode for every Pallas call site (CIC splat/gather,
+    # fused force tile, segment reduce), via kernels.registry: "auto"
+    # resolves compiled → interpret → xla per backend; the other values
+    # force one mode end-to-end (SnsConfig.kernel_mode threads to here)
+    kernel_mode: str = "auto"
 
 
 class PointStats(NamedTuple):
@@ -457,8 +463,15 @@ def _grid_convolve(grid: jnp.ndarray, g: int, h: jnp.ndarray
     return conv1, conv0
 
 
+def _cfg_kernel_mode(cfg: "TsneConfig") -> Optional[str]:
+    """TsneConfig.kernel_mode -> the ``mode`` argument threaded to the
+    kernel call sites (None = defer to legacy interpret flag / registry)."""
+    return None if cfg.kernel_mode == "auto" else cfg.kernel_mode
+
+
 def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
-                  cic: str = "xla", interpret: Optional[bool] = None
+                  cic: str = "xla", interpret: Optional[bool] = None,
+                  mode: Optional[str] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-pairs repulsive field + Z by one particle-mesh FFT pass.
 
@@ -473,9 +486,10 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
 
     ``cic`` selects the splat/gather implementation: ``"xla"`` (scatter
     splat + gather loop) or ``"pallas"`` (the one-hot matmul tile in
-    ``repro.kernels.cic`` — MXU-shaped on TPU, interpret-mode on CPU;
-    ``interpret`` None auto-selects by platform).  The FFT convolution is
-    XLA-native either way.
+    ``repro.kernels.cic``, dispatched through ``kernels.registry`` —
+    ``mode`` forces a registry mode, legacy ``interpret`` maps to
+    interpret/compiled, both-None auto-resolves per backend).  The FFT
+    convolution is XLA-native either way.
     """
     if cic not in CIC_PATHS:
         raise ValueError(f"unknown cic {cic!r}; want one of {CIC_PATHS}")
@@ -488,7 +502,8 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
         from repro.kernels import ops
         masses = jnp.stack([jnp.ones((n,), jnp.float32),
                             y[:, 0], y[:, 1]], axis=1)       # (N, 3)
-        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret)
+        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret,
+                             mode=mode)
     else:
         vals = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]])
         grid = _splat_xla(i0, f, vals, g)
@@ -498,7 +513,8 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
     if cic == "pallas":
         from repro.kernels import ops
         fields = jnp.concatenate([conv1, conv0[None]], axis=0)
-        got = ops.cic_gather(fields, i0, f, interpret=interpret)  # (N, 4)
+        got = ops.cic_gather(fields, i0, f, interpret=interpret,
+                             mode=mode)                      # (N, 4)
         s1, sy, phi0 = got[:, 0], got[:, 1:3], got[:, 3]
         z = jnp.maximum(jnp.sum(phi0) - n, 1e-12)
         return s1[:, None] * y - sy, z
@@ -513,7 +529,8 @@ def fft_repulsion(y: jnp.ndarray, grid_size: int = 128, *,
 
 def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
                 grid_size: int = 128, *, cic: str = "xla",
-                interpret: Optional[bool] = None
+                interpret: Optional[bool] = None,
+                mode: Optional[str] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One sparse-backend gradient evaluation: O(N·k + G²·log G).
 
@@ -531,8 +548,10 @@ def sparse_grad(y: jnp.ndarray, sp: SparseP, exaggeration=1.0,
     # Σ over row i = cumsum difference at the precomputed row bounds —
     # one vectorized O(E) pass (XLA CPU scatter walks updates serially,
     # ~100× slower at E ~ 10⁷); shared with the UMAP epoch loop
-    att = coo.segment_reduce((pe * num)[:, None] * diff, sp.bounds)
-    rep, z = fft_repulsion(y, grid_size, cic=cic, interpret=interpret)
+    att = coo.segment_reduce((pe * num)[:, None] * diff, sp.bounds,
+                             mode=mode)
+    rep, z = fft_repulsion(y, grid_size, cic=cic, interpret=interpret,
+                           mode=mode)
     grad = 4.0 * (att - rep / z)
     # KL partials over the sparse support (pe = 0 elsewhere):
     #   KL = Σ pe log pe − Σ pe log num + (Σ pe)·log Z,  Σ pe = exag
@@ -582,7 +601,8 @@ def shard_sparse_p(sp: SparseP, n: int, n_shards: int) -> ShardedSparseP:
 def _fft_repulsion_shard(y_blk: jnp.ndarray, live_blk: jnp.ndarray,
                          y_full: jnp.ndarray, live_full: jnp.ndarray,
                          grid_size: int, axis: str, n: int, *,
-                         cic: str = "xla", interpret: Optional[bool] = None
+                         cic: str = "xla", interpret: Optional[bool] = None,
+                         mode: Optional[str] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-device body of :func:`fft_repulsion` on a row-block mesh.
 
@@ -606,7 +626,8 @@ def _fft_repulsion_shard(y_blk: jnp.ndarray, live_blk: jnp.ndarray,
         from repro.kernels import ops
         masses = jnp.stack([mass, y_blk[:, 0] * mass,
                             y_blk[:, 1] * mass], axis=1)     # (B, 3)
-        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret)
+        grid = ops.cic_splat(i0, f, masses, g, interpret=interpret,
+                             mode=mode)
     else:
         vals = jnp.stack([mass, y_blk[:, 0] * mass, y_blk[:, 1] * mass])
         grid = _splat_xla(i0, f, vals, g)
@@ -617,7 +638,8 @@ def _fft_repulsion_shard(y_blk: jnp.ndarray, live_blk: jnp.ndarray,
     if cic == "pallas":
         from repro.kernels import ops
         fields = jnp.concatenate([conv1, conv0[None]], axis=0)
-        got = ops.cic_gather(fields, i0, f, interpret=interpret)
+        got = ops.cic_gather(fields, i0, f, interpret=interpret,
+                             mode=mode)
         s1, sy, phi0 = got[:, 0], got[:, 1:3].T, got[:, 3]
     else:
         s1 = _gather_xla(conv1[0], i0, f)
@@ -631,7 +653,8 @@ def _fft_repulsion_shard(y_blk: jnp.ndarray, live_blk: jnp.ndarray,
 def sparse_grad_shard(y_blk: jnp.ndarray, layout: coo.ShardedEdgeLayout,
                       val: jnp.ndarray, y_full: jnp.ndarray,
                       exaggeration, grid_size: int, axis: str, n: int, *,
-                      cic: str = "xla", interpret: Optional[bool] = None
+                      cic: str = "xla", interpret: Optional[bool] = None,
+                      mode: Optional[str] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-device sparse gradient: the shard_map body mirroring
     :func:`sparse_grad`.  ``layout``/``val`` are ONE device's squeezed
@@ -645,12 +668,13 @@ def sparse_grad_shard(y_blk: jnp.ndarray, layout: coo.ShardedEdgeLayout,
     pe = exaggeration * val                                  # 0 on padding
     # local rows own their full edge slice (blocks split at row
     # boundaries), so the attraction reduction is entirely local
-    att = coo.segment_reduce((pe * num)[:, None] * diff, layout.src_bounds)
+    att = coo.segment_reduce((pe * num)[:, None] * diff, layout.src_bounds,
+                             mode=mode)
     live_blk = layout.row_offset + jnp.arange(rows_per) < n
     live_full = jnp.arange(n_pad) < n
     rep, z = _fft_repulsion_shard(y_blk, live_blk, y_full, live_full,
                                   grid_size, axis, n, cic=cic,
-                                  interpret=interpret)
+                                  interpret=interpret, mode=mode)
     grad = 4.0 * (att - rep / z)
     grad = jnp.where(live_blk[:, None], grad, 0.0)
     a = jax.lax.psum(jnp.sum(jnp.where(
@@ -711,7 +735,8 @@ def _sparse_stage_mesh(state: TsneState, kls: jnp.ndarray,
             y_full = jax.lax.all_gather(st.y, axis, axis=0, tiled=True)
             grad, kl = sparse_grad_shard(
                 st.y, lay, val, y_full, exag, grid_size, axis, n,
-                cic=cfg.cic, interpret=interpret)
+                cic=cfg.cic, interpret=interpret,
+                mode=_cfg_kernel_mode(cfg))
             st = _momentum_update_shard(st, grad, mom, cfg, axis,
                                         live_blk, n)
             return st, kls.at[it].set(kl)
@@ -857,7 +882,8 @@ def _tiled_grad_kl(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
 
 def embedding_grad(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
                    exaggeration=1.0, *, backend: str = "tiled",
-                   block: int = 512, interpret: Optional[bool] = None
+                   block: int = 512, interpret: Optional[bool] = None,
+                   mode: Optional[str] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One tSNE gradient evaluation on any backend — test/bench surface.
 
@@ -877,7 +903,7 @@ def embedding_grad(x: jnp.ndarray, y: jnp.ndarray, stats: PointStats,
         return ops.tsne_step_fused(
             x, y, stats.beta, stats.zp, shift=stats.shift, weights=stats.w,
             exaggeration=exaggeration, block=min(block, x.shape[0]),
-            interpret=interpret, return_kl=True)
+            interpret=interpret, mode=mode, return_kl=True)
     n = x.shape[0]
     block = min(block, n)
     pad = functools.partial(_pad_rows, block=block)
@@ -929,7 +955,8 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, init, *,
 
         def grad_fn(y, exag):
             return sparse_grad(y, sp, exag, grid_size=cfg.grid_size,
-                               cic=cfg.cic, interpret=interpret)
+                               cic=cfg.cic, interpret=interpret,
+                               mode=_cfg_kernel_mode(cfg))
     else:
         stats = calibrate_stats(x, cfg.perplexity, weights=weights,
                                 search_iters=cfg.sigma_search_iters,
@@ -942,7 +969,8 @@ def _run_tsne(key: jax.Array, x: jnp.ndarray, weights, init, *,
         else:
             def grad_fn(y, exag):
                 return embedding_grad(x, y, stats, exag, backend=backend,
-                                      block=cfg.block, interpret=interpret)
+                                      block=cfg.block, interpret=interpret,
+                                      mode=_cfg_kernel_mode(cfg))
 
     y0 = init if init is not None else \
         1e-4 * jax.random.normal(key, (n, cfg.dims))
@@ -1004,7 +1032,8 @@ def _sparse_stage(state: TsneState, kls: jnp.ndarray, sp: SparseP,
         it = it0 + i
         exag, mom = _phase(it, cfg)
         grad, kl = sparse_grad(state.y, sp, exag, grid_size=grid_size,
-                               cic=cfg.cic, interpret=interpret)
+                               cic=cfg.cic, interpret=interpret,
+                               mode=_cfg_kernel_mode(cfg))
         return _momentum_update(state, grad, mom, cfg), kls.at[it].set(kl)
 
     return jax.lax.fori_loop(0, count, step, (state, kls))
@@ -1066,6 +1095,10 @@ def run_tsne(key: jax.Array, x: jnp.ndarray, cfg: TsneConfig,
             f"sparse backend splats onto a 2D grid; got dims={cfg.dims}")
     if cfg.cic not in CIC_PATHS:
         raise ValueError(f"unknown cic {cfg.cic!r}; want one of {CIC_PATHS}")
+    if cfg.kernel_mode not in ("auto",) + registry_mod.MODES:
+        raise ValueError(
+            f"unknown kernel_mode {cfg.kernel_mode!r}; want one of "
+            f"{('auto',) + registry_mod.MODES}")
     init = validate_init(init, x.shape[0], cfg.dims)
     if cfg.n_iter == 0:
         # degenerate but load-bearing for the warm-start contract: the

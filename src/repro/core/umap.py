@@ -82,6 +82,16 @@ class UmapConfig:
     # points; ``ann`` carries its knobs (an ann.AnnConfig)
     knn_method: str = "auto"
     ann: Optional[object] = None
+    # kernel dispatch mode for the segment-reduce call sites (see
+    # kernels.registry): "auto" keeps the cumsum path on CPU and the
+    # fused kernel on accelerators; other values force one mode
+    kernel_mode: str = "auto"
+
+
+def _cfg_kernel_mode(cfg: UmapConfig) -> Optional[str]:
+    """UmapConfig.kernel_mode -> the ``mode`` threaded to segment_reduce
+    (None = defer to the registry's process-level resolution)."""
+    return None if cfg.kernel_mode == "auto" else cfg.kernel_mode
 
 
 @functools.lru_cache(maxsize=None)
@@ -161,8 +171,8 @@ class _OptState(NamedTuple):
 
 
 def epoch_delta(y: jnp.ndarray, layout: coo.EdgeLayout, memb_n: jnp.ndarray,
-                kneg: jax.Array, a: float, b: float, neg_rate: int
-                ) -> jnp.ndarray:
+                kneg: jax.Array, a: float, b: float, neg_rate: int,
+                mode: Optional[str] = None) -> jnp.ndarray:
     """One epoch's per-point SGD delta — the scatter-free epoch body.
 
     ``layout``/``memb_n`` come from the one-time setup (stable src-sort +
@@ -203,8 +213,9 @@ def epoch_delta(y: jnp.ndarray, layout: coo.EdgeLayout, memb_n: jnp.ndarray,
     # side (the attraction reaction, −att) via the precomputed gather
     # into dst-sorted order — two O(E) cumsum passes, no .at[].add
     return coo.segment_reduce(att + jnp.sum(rep, axis=1),
-                              layout.src_bounds) \
-        - coo.segment_reduce(att[layout.dst_order], layout.dst_bounds)
+                              layout.src_bounds, mode=mode) \
+        - coo.segment_reduce(att[layout.dst_order], layout.dst_bounds,
+                             mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
@@ -225,7 +236,8 @@ def _optimize_embedding_jit(key: jax.Array, edges: jnp.ndarray,
         y, key = state
         key, kneg = jax.random.split(key)
         alpha = cfg.learning_rate * (1.0 - i / cfg.n_epochs)
-        delta = epoch_delta(y, layout, memb_n, kneg, a, b, cfg.neg_rate)
+        delta = epoch_delta(y, layout, memb_n, kneg, a, b, cfg.neg_rate,
+                            mode=_cfg_kernel_mode(cfg))
         return _OptState(y + alpha * delta, key)
 
     state = jax.lax.fori_loop(0, cfg.n_epochs, epoch, _OptState(y0, kloop))
@@ -235,7 +247,8 @@ def _optimize_embedding_jit(key: jax.Array, edges: jnp.ndarray,
 def epoch_delta_shard(y_blk: jnp.ndarray, y_full: jnp.ndarray,
                       lay: coo.ShardedEdgeLayout, memb_n: jnp.ndarray,
                       kneg: jax.Array, a: float, b: float, neg_rate: int,
-                      n: int, e_total: int, axis: str) -> jnp.ndarray:
+                      n: int, e_total: int, axis: str,
+                      mode: Optional[str] = None) -> jnp.ndarray:
     """One epoch's per-point delta for ONE device's row block — the
     shard_map body mirroring :func:`epoch_delta`.
 
@@ -267,9 +280,9 @@ def epoch_delta_shard(y_blk: jnp.ndarray, y_full: jnp.ndarray,
                    -4.0, 4.0) * memb_n[:, None, None]
     rep = jnp.where(valid[..., None], rep, 0.0)
     src_red = coo.segment_reduce(att + jnp.sum(rep, axis=1),
-                                 lay.src_bounds)         # (rows_per, dims)
+                                 lay.src_bounds, mode=mode)  # (rows_per, dims)
     dst_part = coo.segment_reduce(att[lay.dst_order],
-                                  lay.dst_bounds)        # (n_pad, dims)
+                                  lay.dst_bounds, mode=mode)  # (n_pad, dims)
     dst_tot = jax.lax.psum(dst_part, axis)               # THE dst exchange
     rows_per = lay.src_bounds.shape[0] - 1
     dst_blk = jax.lax.dynamic_slice_in_dim(dst_tot, lay.row_offset,
@@ -313,7 +326,8 @@ def _optimize_embedding_mesh(key: jax.Array, slay: coo.ShardedEdgeLayout,
             alpha = cfg.learning_rate * (1.0 - i / cfg.n_epochs)
             y_full = jax.lax.all_gather(y_blk, axis, axis=0, tiled=True)
             delta = epoch_delta_shard(y_blk, y_full, lay, memb_loc, kneg,
-                                      a, b, cfg.neg_rate, n, e_total, axis)
+                                      a, b, cfg.neg_rate, n, e_total, axis,
+                                      mode=_cfg_kernel_mode(cfg))
             return _OptState(y_blk + alpha * delta, key)
 
         state = jax.lax.fori_loop(0, cfg.n_epochs, epoch,

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 
 def _onehot_weights(i0: jnp.ndarray, f: jnp.ndarray, g: int):
     """Separable CIC weight matrices wx, wy (B, G) for one point tile."""
@@ -98,7 +100,7 @@ def cic_splat(i0: jnp.ndarray, f: jnp.ndarray, vals: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((c, grid_size, grid_size),
                                        jnp.float32),
         interpret=interpret,
-    )(i0, f, vals.astype(jnp.float32))
+    )(i0, f.astype(jnp.float32), vals.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("block_items", "interpret"))
@@ -125,4 +127,58 @@ def cic_gather(fields: jnp.ndarray, i0: jnp.ndarray, f: jnp.ndarray, *,
         out_specs=pl.BlockSpec((block_items, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
         interpret=interpret,
-    )(fields.astype(jnp.float32), i0, f)
+    )(fields.astype(jnp.float32), i0, f.astype(jnp.float32))
+
+
+# -- XLA references + registry wiring ---------------------------------------
+
+def cic_splat_xla(i0: jnp.ndarray, f: jnp.ndarray, vals: jnp.ndarray,
+                  grid_size: int, **_tile) -> jnp.ndarray:
+    """Pure-XLA splat: four scatter-adds, one per CIC corner.  Same
+    padding contract as the kernel (zero-mass rows splat nothing)."""
+    f = f.astype(jnp.float32)
+    v = vals.astype(jnp.float32)
+    out = jnp.zeros((vals.shape[1], grid_size, grid_size), jnp.float32)
+    for dx in (0, 1):
+        for dy in (0, 1):
+            w = ((f[:, 0] if dx else 1.0 - f[:, 0])
+                 * (f[:, 1] if dy else 1.0 - f[:, 1]))      # (N,)
+            out = out.at[:, i0[:, 0] + dx, i0[:, 1] + dy].add(
+                w[None, :] * v.T)
+    return out
+
+
+def cic_gather_xla(fields: jnp.ndarray, i0: jnp.ndarray, f: jnp.ndarray,
+                   **_tile) -> jnp.ndarray:
+    """Pure-XLA gather: four corner gathers, bilinearly weighted."""
+    f = f.astype(jnp.float32)
+    fld = fields.astype(jnp.float32)
+    acc = jnp.zeros((i0.shape[0], fields.shape[0]), jnp.float32)
+    for dx in (0, 1):
+        for dy in (0, 1):
+            w = ((f[:, 0] if dx else 1.0 - f[:, 0])
+                 * (f[:, 1] if dy else 1.0 - f[:, 1]))      # (N,)
+            acc = acc + w[:, None] * fld[:, i0[:, 0] + dx, i0[:, 1] + dy].T
+    return acc
+
+
+def _splat_mode(interpret: bool):
+    def fn(i0, f, vals, grid_size, *, block_items: int = 1024):
+        return cic_splat(i0, f, vals, grid_size, block_items=block_items,
+                         interpret=interpret)
+    return fn
+
+
+def _gather_mode(interpret: bool):
+    def fn(fields, i0, f, *, block_items: int = 1024):
+        return cic_gather(fields, i0, f, block_items=block_items,
+                          interpret=interpret)
+    return fn
+
+
+registry.register("cic_splat", "compiled")(_splat_mode(False))
+registry.register("cic_splat", "interpret")(_splat_mode(True))
+registry.register("cic_splat", "xla")(cic_splat_xla)
+registry.register("cic_gather", "compiled")(_gather_mode(False))
+registry.register("cic_gather", "interpret")(_gather_mode(True))
+registry.register("cic_gather", "xla")(cic_gather_xla)

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 
 def _dist_kernel(qx_ref, qid_ref, cx_ref, cid_ref, out_ref):
     q = qx_ref[0]                                            # (B, D)
@@ -81,18 +83,39 @@ def _distance_tiles_xla(qx: jnp.ndarray, qid: jnp.ndarray,
 
 def distance_tiles(qx: jnp.ndarray, qid: jnp.ndarray, cx: jnp.ndarray,
                    cid: jnp.ndarray, *, tile: str = "xla",
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool = True,
+                   mode: str = None) -> jnp.ndarray:
     """Masked squared-distance blocks for T query tiles.
 
     qx (T, B, D) query rows, qid (T, B) int32 global ids, cx (T, C, D)
     candidate windows, cid (T, C) int32 candidate ids (−1 = padding).
     Returns (T, B, C) float32 squared distances with padding and
-    self-pairs forced to +inf.  ``tile`` picks the Pallas kernel
-    (interpret-mode on CPU) or the XLA reference; both produce the same
-    masked blocks.
+    self-pairs forced to +inf.
+
+    Dispatch goes through ``kernels.registry`` (op ``knn_dist_tiles``).
+    ``mode`` forces a registry mode directly; with ``mode=None`` a
+    process-level pin (``SNS_KERNEL_MODE`` / override) wins, else the
+    legacy ``tile``/``interpret`` pair selects the path as before.
     """
-    if tile == "pallas":
-        return _distance_tiles_pallas(qx, qid, cx, cid, interpret=interpret)
-    if tile != "xla":
+    if tile not in ("pallas", "xla"):
         raise ValueError(f"unknown distance tile backend: {tile!r}")
-    return _distance_tiles_xla(qx, qid, cx, cid)
+    if mode is None:
+        pinned = registry.resolve_mode(None, "knn_dist_tiles")
+        if pinned != "auto":
+            mode = pinned
+        elif tile == "pallas":
+            mode = "interpret" if interpret else "compiled"
+        else:
+            mode = "xla"
+    impl = registry.resolve("knn_dist_tiles", mode=mode, shape=qx.shape,
+                            dtype=qx.dtype)
+    return impl.fn(qx, qid, cx, cid)
+
+
+registry.register("knn_dist_tiles", "compiled")(
+    lambda qx, qid, cx, cid: _distance_tiles_pallas(
+        qx, qid, cx, cid, interpret=False))
+registry.register("knn_dist_tiles", "interpret")(
+    lambda qx, qid, cx, cid: _distance_tiles_pallas(
+        qx, qid, cx, cid, interpret=True))
+registry.register("knn_dist_tiles", "xla")(_distance_tiles_xla)

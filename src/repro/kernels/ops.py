@@ -20,12 +20,13 @@ from repro.core import quantize as quantize_mod
 from repro.core.hashing import MulShiftParams
 from repro.core.quantize import GridSpec
 from repro.core.sketch import CountSketch
-from repro.kernels import cic as _cic
+from repro.kernels import cic as _cic  # noqa: F401 (registers cic ops)
 from repro.kernels import hash_points as _hp
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels import sketch_estimate as _se
 from repro.kernels import sketch_update as _su
-from repro.kernels import tsne_forces as _tf
+from repro.kernels import tsne_forces as _tf  # noqa: F401 (registers tsne_step)
 
 
 def _pad_to(x: jnp.ndarray, multiple: int, axis: int = 0,
@@ -93,71 +94,92 @@ def sketch_estimate_mxu(sk: CountSketch, key_hi: jnp.ndarray,
 
 
 def cic_splat(i0: jnp.ndarray, f: jnp.ndarray, vals: jnp.ndarray,
-              grid_size: int, *, block_items: int = 1024,
-              interpret: Optional[bool] = None) -> jnp.ndarray:
+              grid_size: int, *, block_items: Optional[int] = None,
+              interpret: Optional[bool] = None,
+              mode: Optional[str] = None) -> jnp.ndarray:
     """Cloud-in-cell splat of (N, C) channel masses → (C, G, G) grid.
 
     Pads the point list to ``block_items`` (padded rows carry zero mass,
-    so they splat nothing).  ``interpret`` None auto-selects by platform.
+    so they splat nothing).  Dispatch goes through ``kernels.registry``
+    (op ``cic_splat``): ``mode`` forces a registry mode; the legacy
+    ``interpret`` flag is a backend-derived default that a process-level
+    pin (override / ``SNS_KERNEL_MODE``) beats; both-None resolves
+    compiled → interpret → xla for the current backend.  ``block_items``
+    None consults the per-backend tile table (autotune-cache aware).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    impl = registry.resolve("cic_splat",
+                            mode=registry.legacy_mode("cic_splat",
+                                                      interpret, mode),
+                            shape=vals.shape, dtype=vals.dtype)
+    if block_items is None:
+        block_items = registry.tile_params(
+            "cic_splat", shape=vals.shape)["block_items"]
     i0p, _ = _pad_to(i0, block_items)
     fp, _ = _pad_to(f, block_items)
     vp, _ = _pad_to(vals, block_items)        # pad mass 0 → no-op splat
-    return _cic.cic_splat(i0p, fp, vp, grid_size,
-                          block_items=block_items, interpret=interpret)
+    return impl.fn(i0p, fp, vp, grid_size, block_items=block_items)
 
 
 def cic_gather(fields: jnp.ndarray, i0: jnp.ndarray, f: jnp.ndarray, *,
-               block_items: int = 1024,
-               interpret: Optional[bool] = None) -> jnp.ndarray:
+               block_items: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               mode: Optional[str] = None) -> jnp.ndarray:
     """Bilinear gather of C grid fields at N points → (N, C).
 
     Pads the point list to ``block_items`` and slices the junk rows off.
-    ``interpret`` None auto-selects by platform.
+    Dispatch as in :func:`cic_splat` (op ``cic_gather``).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    impl = registry.resolve("cic_gather",
+                            mode=registry.legacy_mode("cic_gather",
+                                                      interpret, mode),
+                            shape=fields.shape, dtype=fields.dtype)
+    if block_items is None:
+        block_items = registry.tile_params(
+            "cic_gather", shape=fields.shape)["block_items"]
     i0p, n = _pad_to(i0, block_items)
     fp, _ = _pad_to(f, block_items)
-    out = _cic.cic_gather(fields, i0p, fp,
-                          block_items=block_items, interpret=interpret)
+    out = impl.fn(fields, i0p, fp, block_items=block_items)
     return out[:n]
 
 
 def tsne_step_fused(x: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray,
                     zp: jnp.ndarray, *, shift: Optional[jnp.ndarray] = None,
                     weights: Optional[jnp.ndarray] = None,
-                    exaggeration=1.0, block: int = 256,
+                    exaggeration=1.0, block: Optional[int] = None,
                     interpret: Optional[bool] = None,
+                    mode: Optional[str] = None,
                     return_kl: bool = False):
     """One fused tSNE gradient: pass-1 Z reduction + pass-2 force tiles.
 
     ``shift`` is the per-row log-domain shift paired with ``zp`` (None =
     unshifted zp, the legacy convention); ``weights`` the normalized point
     masses (None = uniform 1/N, the classic symmetrization).  Exaggeration
-    may be a traced scalar.  ``interpret`` None auto-selects by platform.
+    may be a traced scalar.  Dispatch goes through ``kernels.registry``
+    (op ``tsne_step``; ``mode``/``interpret`` as in :func:`cic_splat`,
+    ``block`` None consults the tile table).  Inputs are promoted to fp32
+    before the kernel regardless of dtype (fp16/bf16 in → fp32 accum).
     With ``return_kl`` also returns the KL of exag·P against current Q.
     """
     n = x.shape[0]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    impl = registry.resolve("tsne_step",
+                            mode=registry.legacy_mode("tsne_step",
+                                                      interpret, mode),
+                            shape=x.shape, dtype=x.dtype)
+    if block is None:
+        block = registry.tile_params("tsne_step", shape=x.shape)["block"]
     m = jnp.zeros((n,), jnp.float32) if shift is None else shift
     w = jnp.full((n,), 1.0 / n, jnp.float32) if weights is None \
         else weights / jnp.sum(weights)
     stats = jnp.stack([beta.astype(jnp.float32), m.astype(jnp.float32),
                        zp.astype(jnp.float32), w.astype(jnp.float32)], axis=1)
-    xpad, _ = _pad_to(x, block)
-    ypad, _ = _pad_to(y, block)
+    xpad, _ = _pad_to(x.astype(jnp.float32), block)
+    ypad, _ = _pad_to(y.astype(jnp.float32), block)
     spad = jnp.pad(stats, [(0, (-n) % block), (0, 0)])
     # padded rows: zp=1 avoids 0-div, w=0 removes them from P
     if (-n) % block:
         spad = spad.at[n:, 2].set(1.0)
-    z = _tf.tsne_z(ypad, block=block, n_valid=n, interpret=interpret)
     exag = jnp.asarray(exaggeration, jnp.float32)
-    f, kl_parts = _tf.tsne_forces(xpad, ypad, spad, z, exag, block=block,
-                                  n_valid=n, interpret=interpret)
+    f, kl_parts, z = impl.fn(xpad, ypad, spad, exag, block=block, n_valid=n)
     if not return_kl:
         return f[:n]
     kl = kl_parts[0, 0] - kl_parts[0, 1] + exag * jnp.log(z)

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 
 def _sq_dists(a, b):
     """(Bi, D), (Bj, D) -> (Bi, Bj) squared distances, MXU-shaped."""
@@ -168,3 +170,58 @@ def tsne_forces(x: jnp.ndarray, y: jnp.ndarray, stats: jnp.ndarray,
         ),
         interpret=interpret,
     )(x, x, y, y, stats, stats, scal)
+
+
+# -- XLA reference + registry wiring ----------------------------------------
+# The registered op "tsne_step" is the full two-pass iteration on the
+# PADDED arrays: fn(x, y, stats, exaggeration, *, block, n_valid) ->
+# (forces (N, dims), kl_parts (1, 2), z).  ops.tsne_step_fused handles
+# padding/unpadding and routes here through the registry.
+
+def tsne_step_xla(x: jnp.ndarray, y: jnp.ndarray, stats: jnp.ndarray,
+                  exaggeration, *, block: int = 256,
+                  n_valid: int = None) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """Dense pure-jnp reference with the kernel's exact masking and KL
+    partial-sum semantics (``block`` is accepted and ignored)."""
+    n = x.shape[0]
+    n_valid = n if n_valid is None else n_valid
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    beta, shift, zp, w = (stats[:, 0].astype(jnp.float32),
+                          stats[:, 1].astype(jnp.float32),
+                          stats[:, 2].astype(jnp.float32),
+                          stats[:, 3].astype(jnp.float32))
+    idx = jnp.arange(n)
+    mask = ((idx[:, None] != idx[None, :])
+            & (idx[:, None] < n_valid) & (idx[None, :] < n_valid))
+    d2x = _sq_dists(x, x)
+    pc = jnp.exp(-beta[:, None] * d2x - shift[:, None]) / zp[:, None]
+    p = jnp.where(mask, 0.5 * (w[:, None] * pc + w[None, :] * pc.T), 0.0)
+    num = jnp.where(mask, 1.0 / (1.0 + _sq_dists(y, y)), 0.0)
+    z = jnp.sum(num)
+    exag = jnp.asarray(exaggeration, jnp.float32)
+    pe = exag * p
+    pq = (pe - num / z) * num
+    forces = 4.0 * (jnp.sum(pq, axis=1, keepdims=True) * y
+                    - jnp.dot(pq, y, preferred_element_type=jnp.float32))
+    kl_parts = jnp.stack([
+        jnp.sum(jnp.where(pe > 0, pe * jnp.log(jnp.maximum(pe, 1e-37)), 0.0)),
+        jnp.sum(jnp.where(pe > 0, pe * jnp.log(jnp.maximum(num, 1e-37)),
+                          0.0))]).reshape(1, 2)
+    return forces, kl_parts, z
+
+
+def _step_mode(interpret: bool):
+    def fn(x, y, stats, exaggeration, *, block: int = 256, n_valid=None):
+        z = tsne_z(y, block=block, n_valid=n_valid, interpret=interpret)
+        f, kl_parts = tsne_forces(
+            x, y, stats, z, jnp.asarray(exaggeration, jnp.float32),
+            block=block, n_valid=n_valid, interpret=interpret)
+        return f, kl_parts, z
+    return fn
+
+
+registry.register("tsne_step", "compiled")(_step_mode(False))
+registry.register("tsne_step", "interpret")(_step_mode(True))
+registry.register("tsne_step", "xla")(tsne_step_xla)

@@ -229,3 +229,139 @@ def test_lost_mass_estimated_without_expected_counts(grid):
                    faults=FaultPlan(seed=0, drop_shards=(1,)))
     assert res.coverage == pytest.approx((N_SHARDS - 1) / N_SHARDS)
     assert res.hh_error_bound >= PER_SHARD   # the estimated lost mass
+
+
+# ----------------------------------------- non-retryable exception classes
+def test_value_error_fails_immediately():
+    """Deterministic failures must not burn the attempt budget: a
+    ValueError re-raises from the FIRST attempt, untouched."""
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise ValueError("bad config")
+
+    with pytest.raises(ValueError, match="bad config"):
+        resilience.call_with_retry(fn, FAST)
+    assert len(calls) == 1
+
+
+def test_checkpoint_corrupt_fails_immediately():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise stream.CheckpointCorruptError("bit rot")
+
+    with pytest.raises(stream.CheckpointCorruptError):
+        resilience.call_with_retry(fn, FAST)
+    assert len(calls) == 1
+
+
+def test_integrity_error_still_retries():
+    """The digest-mismatch path must STAY retryable — corruption in
+    transit is transient by definition."""
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 2:
+            raise IntegrityError("digest mismatch")
+        return "ok"
+
+    out, attempts = resilience.call_with_retry(fn, FAST)
+    assert out == "ok" and attempts == 2
+
+
+def test_custom_exception_classes_override_default():
+    """An empty deny tuple restores retry-everything; a custom allowlist
+    excludes everything else."""
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise ValueError("flaky-but-declared-retryable")
+
+    relaxed = RetryPolicy(max_attempts=2, base_delay=0.001,
+                          non_retryable_exceptions=())
+    with pytest.raises(RetryError):
+        resilience.call_with_retry(fn, relaxed)
+    assert len(calls) == 2
+
+    strict = RetryPolicy(max_attempts=3, base_delay=0.001,
+                         retryable_exceptions=(IntegrityError,),
+                         non_retryable_exceptions=())
+    calls.clear()
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("not on the allowlist")
+
+    with pytest.raises(RuntimeError, match="allowlist"):
+        resilience.call_with_retry(boom, strict)
+    assert len(calls) == 1
+
+
+def test_policy_rejects_non_exception_tuples():
+    with pytest.raises(ValueError, match="retryable_exceptions"):
+        RetryPolicy(retryable_exceptions=("ValueError",))
+
+
+def test_collector_degrades_on_non_retryable_shard(grid):
+    """A shard whose job raises ValueError is recorded as lost with a
+    non-retryable verdict after ONE attempt; the healthy shards still
+    partial-aggregate."""
+    data = _shard_data()
+    jobs = geo.shard_ingest_jobs(grid, data, seed=0, rows=ROWS,
+                                 log2_cols=LOG2_COLS, pool=POOL,
+                                 chunk_size=PER_SHARD)
+    poisoned = dict(jobs)
+
+    def bad():
+        raise ValueError("deterministic poison")
+
+    poisoned[0] = bad
+    res = resilience.collect_shards(poisoned, policy=FAST, verify=True)
+    st = res.statuses[0]
+    assert not st.ok and st.attempts == 1
+    assert "non-retryable" in st.error and "ValueError" in st.error
+    assert res.lost == (0,)
+    assert res.n_ok == N_SHARDS - 1
+
+
+# ------------------------------------------------- attempt latency capture
+def test_attempt_seconds_recorded_per_attempt():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        time.sleep(0.002)
+        if len(calls) < 3:
+            raise IntegrityError("again")
+        return "ok"
+
+    laps = []
+    out, attempts = resilience.call_with_retry(
+        fn, FAST, on_attempt=lambda a, s, e: laps.append((a, s, e)))
+    assert attempts == 3 and len(laps) == 3
+    assert [a for a, _, _ in laps] == [0, 1, 2]
+    assert all(s >= 0.002 for _, s, _ in laps)
+    assert laps[-1][2] is None and laps[0][2] is not None
+
+
+def test_shard_status_carries_attempt_seconds(grid):
+    data = _shard_data()
+    plan = FaultPlan(seed=3, flaky=0.4)
+    res = _extract(grid, data, faults=plan,
+                   policy=RetryPolicy(max_attempts=4, base_delay=0.001))
+    for st in res.statuses:
+        if st.ok:
+            assert len(st.attempt_seconds) == st.attempts
+            assert all(s >= 0 for s in st.attempt_seconds)
+
+
+def test_latency_histogram_buckets():
+    h = resilience.latency_histogram([0.0005, 0.005, 0.5, 50.0, 0.002])
+    assert len(h) == len(resilience.LATENCY_BUCKET_LABELS)
+    assert h == [1, 2, 0, 1, 0, 1]
+    assert sum(h) == 5

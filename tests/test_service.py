@@ -227,3 +227,37 @@ def test_failed_refresh_rolls_back(scenario, monkeypatch):
     assert "embed exploded" in h["last_refresh"]["error"]
     # the served snapshot is byte-identical to the pre-failure one
     np.testing.assert_array_equal(np.asarray(svc._cache.rep_y), before)
+
+
+def test_health_exposes_per_shard_latency_histograms(data):
+    """update_shards() feeds per-shard attempt counts and per-attempt
+    wall-clock buckets into health() — including failed attempts from
+    flaky shards."""
+    from repro.core import resilience
+    from repro.core.faults import FaultPlan
+
+    pts, _ = data
+    grid = quantize.fit_grid(pts, CFG.bins)
+    svc = SnsService(CFG, grid, tsne_cfg=TC, service_cfg=SCFG)
+    shards = {s: [pts[s * 500:(s + 1) * 500]] for s in range(4)}
+    svc.update_shards(
+        shards, faults=FaultPlan(seed=1, flaky=0.5),
+        policy=resilience.RetryPolicy(max_attempts=4, base_delay=0.001))
+    h = svc.health()
+    lat = h["shard_latency"]
+    assert set(lat) == set(range(4))
+    for s, rec in lat.items():
+        assert rec["attempts"] >= 1
+        assert set(rec["buckets"]) == set(resilience.LATENCY_BUCKET_LABELS)
+        # every recorded attempt landed in exactly one bucket
+        assert sum(rec["buckets"].values()) == rec["attempts"]
+        assert rec["failures"] == 0        # retries rescued every shard
+    retries = h["update_retries"]
+    assert retries >= 1                    # flaky=0.5 over 4x4 attempts
+    assert sum(r["attempts"] for r in lat.values()) == 4 + retries
+    # a second pass accumulates rather than resets
+    svc.update_shards(shards)
+    lat2 = svc.health()["shard_latency"]
+    assert all(lat2[s]["attempts"] > lat[s]["attempts"] or
+               lat2[s]["attempts"] == lat[s]["attempts"] + 1
+               for s in lat2)

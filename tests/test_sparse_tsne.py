@@ -227,7 +227,13 @@ def test_sparse_iteration_jaxpr_subquadratic():
         int(np.prod(a.shape, dtype=np.int64))
         for a in iter_jaxpr_avals(jaxpr.jaxpr) if hasattr(a, "shape"))
     assert biggest < n * n // 8, f"buffer of {biggest} elems ~ O(N²)"
-    assert count_primitive(jaxpr.jaxpr, "dot_general") == 0
+    # "no dot at all" is a property of the XLA cumsum segment-reduce; the
+    # fused Pallas kernel (pinned via SNS_KERNEL_MODE=interpret/compiled)
+    # uses a block-sized one-hot matmul by design, still subquadratic.
+    from repro.kernels import registry
+    seg = registry.resolve("segment_reduce", shape=(n,), dtype=jnp.float32)
+    if seg.mode == "xla":
+        assert count_primitive(jaxpr.jaxpr, "dot_general") == 0
 
 
 def test_full_sparse_run_tsne_never_allocates_n_by_n():
